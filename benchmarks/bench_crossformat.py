@@ -1,0 +1,46 @@
+"""Table IV: cross-format train/test matrix.
+
+Train LeNet-300-100 once per multiplier, then evaluate each trained model
+under every OTHER multiplier — the paper's no-multiplier-overfitting
+experiment.  Diagonal = matched train/test; off-diagonal deltas should be
+small (paper: within 0.1%)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_convergence import MULTIPLIERS, train_one
+from benchmarks.common import emit
+from repro.configs.paper_models import LENET_300_100
+from repro.data.pipeline import vision_dataset
+from repro.models.vision import vision_forward
+
+
+def main(epochs=2, n_train=512):
+    cfg = LENET_300_100
+    data = vision_dataset("crossfmt", n_train, 512, cfg.input_hw,
+                          cfg.input_ch, cfg.n_classes)
+    trained = {}
+    for name, pol in MULTIPLIERS.items():
+        _, _, params = train_one(cfg, pol, data, epochs=epochs)
+        trained[name] = params
+
+    matrix = {}
+    for tr_name, params in trained.items():
+        for te_name, pol in MULTIPLIERS.items():
+            logits = vision_forward(params, jnp.asarray(data["x_test"]),
+                                    cfg, pol)
+            acc = float(np.mean(np.argmax(np.asarray(logits), -1)
+                                == data["y_test"]))
+            matrix[(tr_name, te_name)] = acc
+            emit(f"tableIV_train-{tr_name}_test-{te_name}", 0.0,
+                 f"acc={acc:.4f}")
+    # max off-diagonal deviation from the diagonal
+    dev = max(abs(matrix[(a, b)] - matrix[(a, a)])
+              for a in trained for b in trained)
+    emit("tableIV_max_crossformat_deviation", 0.0, f"{dev:.4f}")
+    return matrix
+
+
+if __name__ == "__main__":
+    main()

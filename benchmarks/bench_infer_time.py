@@ -1,0 +1,33 @@
+"""Table VI: inference run-time per batch across execution modes
+(same mode mapping as bench_train_time, forward only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from benchmarks.bench_train_time import MODES
+from repro.configs.paper_models import VISION_REGISTRY
+from repro.data.pipeline import vision_dataset
+from repro.models.vision import init_vision, vision_forward
+
+
+def main(models=("lenet-300-100", "lenet-5", "resnet-mini"), batch=64):
+    for mname in models:
+        cfg = VISION_REGISTRY[mname]
+        data = vision_dataset(mname, 256, 64, cfg.input_hw, cfg.input_ch,
+                              cfg.n_classes)
+        x = jnp.asarray(data["x_train"][:batch])
+        params = init_vision(jax.random.PRNGKey(0), cfg)
+        times = {}
+        for mode, pol in MODES.items():
+            fwd = jax.jit(lambda p, x, pol=pol: vision_forward(p, x, cfg, pol))
+            t = time_fn(fwd, params, x)
+            times[mode] = t
+            emit(f"inferVI_{mname}_{mode}", t, f"batch={batch}")
+        emit(f"inferVI_{mname}_ratio_ATxG/TFnG",
+             times["ATxG"] / times["TFnG"])
+
+
+if __name__ == "__main__":
+    main()

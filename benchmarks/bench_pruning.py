@@ -1,0 +1,71 @@
+"""Fig. 11: approximate multipliers on top of magnitude pruning.
+
+Pretrain LeNet-300-100, magnitude-prune dense weights to increasing
+sparsity, fine-tune briefly, measure test accuracy per multiplier
+{fp32, bf16, afm16} — the paper's hardware/algorithm co-design demo."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_convergence import train_one
+from benchmarks.common import emit
+from repro.configs.paper_models import LENET_300_100
+from repro.core.policy import NumericsPolicy
+from repro.data.pipeline import vision_batches, vision_dataset
+from repro.models.vision import vision_forward, vision_loss
+from repro.optim.optimizers import make_optimizer
+from repro.train.step import make_train_step
+
+POLICIES = {
+    "fp32": NumericsPolicy(),
+    "bf16": NumericsPolicy(mode="amsim_jnp", multiplier="bf16"),
+    "afm16": NumericsPolicy(mode="amsim_jnp", multiplier="afm16"),
+}
+
+
+def prune_mask(params, sparsity: float):
+    masks = []
+    for lp in params["dense"]:
+        w = np.asarray(lp["w"])
+        thresh = np.quantile(np.abs(w), sparsity)
+        masks.append(jnp.asarray((np.abs(w) > thresh).astype(np.float32)))
+    return masks
+
+
+def apply_mask(params, masks):
+    out = {"dense": []}
+    for lp, m in zip(params["dense"], masks):
+        out["dense"].append({"w": lp["w"] * m, "b": lp["b"]})
+    return out
+
+
+def main(sparsities=(0.5, 0.7, 0.9), epochs=2, n_train=512):
+    cfg = LENET_300_100
+    data = vision_dataset("pruning", n_train, 512, cfg.input_hw,
+                          cfg.input_ch, cfg.n_classes)
+    for pname, pol in POLICIES.items():
+        _, base_acc, params = train_one(cfg, pol, data, epochs=epochs)
+        emit(f"pruning_{pname}_dense", 0.0, f"acc={base_acc:.4f}")
+        for s in sparsities:
+            masks = prune_mask(params, s)
+            pruned = apply_mask(params, masks)
+            # fine-tune one epoch with the mask enforced
+            opt = make_optimizer("sgdm", 0.02)
+            state = opt.init(pruned)
+            step = jax.jit(make_train_step(
+                lambda p, b: vision_loss(p, b, cfg, pol), opt))
+            for b in vision_batches(data, 64, epoch=99):
+                b = {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+                pruned, state, _ = step(pruned, state, b)
+                pruned = apply_mask(pruned, masks)
+            logits = vision_forward(pruned, jnp.asarray(data["x_test"]),
+                                    cfg, pol)
+            acc = float(np.mean(np.argmax(np.asarray(logits), -1)
+                                == data["y_test"]))
+            emit(f"pruning_{pname}_s{int(s * 100)}", 0.0, f"acc={acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

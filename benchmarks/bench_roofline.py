@@ -1,0 +1,58 @@
+"""Deliverable (g): roofline table from results/dryrun.jsonl.
+
+Reads the dry-run artifacts and emits the per-(arch x shape x mesh)
+roofline rows (markdown + CSV).  Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path("results/dryrun.jsonl")
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | mem-UB ms | "
+          "collective ms | dominant | useful-FLOP frac | roofline frac |")
+SEP = "|" + "---|" * 10
+
+
+def load(path=RESULTS):
+    rows = {}
+    if not path.exists():
+        return rows
+    for line in path.open():
+        r = json.loads(line)
+        rows[(r["arch"], r["shape"], r["mesh"], r.get("numerics", ""))] = r
+    return rows
+
+
+def fmt_row(r):
+    if r["status"] == "skip":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| SKIP | — | — |  <!-- {r['reason'][:60]} -->")
+    if r["status"] != "ok":
+        return f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR: {r['error'][:60]} |"
+    uf = r["model_flops"] / max(r["hlo_flops_per_dev"] * r["chips"], 1)
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['memory_ub_s']*1e3:.1f} | {r['collective_s']*1e3:.2f} "
+            f"| {r['dominant']} | {uf:.2f} | {r['roofline_frac']:.1%} |")
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run results found — run repro.launch.dryrun first")
+        return
+    print(HEADER)
+    print(SEP)
+    for key in sorted(rows):
+        print(fmt_row(rows[key]))
+    n_ok = sum(r["status"] == "ok" for r in rows.values())
+    print(f"\n# {n_ok} compiled cells, "
+          f"{sum(r['status'] == 'skip' for r in rows.values())} skips, "
+          f"{sum(r['status'] == 'error' for r in rows.values())} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Table V: training run-time per batch across execution modes.
+
+Paper's four measurements mapped to this stack (CPU container; the
+STRUCTURE of the comparison is the reproduction — see EXPERIMENTS.md):
+
+  TFnG  -> native XLA-compiled train step           (native multipliers)
+  ATnG  -> our op stack, exact numerics, XLA path   (custom-kernel overhead)
+  ATxG  -> LUT simulation (AMSim), jit-compiled     (vectorised sim)
+  ATxC  -> direct numpy CPU simulation, unjitted    (the 2500x-slower path)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.paper_models import VISION_REGISTRY
+from repro.core.lutgen import get_lut
+from repro.core.multipliers import get_multiplier
+from repro.core.policy import NumericsPolicy
+from repro.core.amsim import np_amsim_multiply
+from repro.data.pipeline import vision_dataset
+from repro.models.vision import init_vision, vision_loss
+from repro.optim.optimizers import make_optimizer
+from repro.train.step import make_train_step
+
+MODES = {
+    "TFnG": NumericsPolicy(),
+    "ATnG": NumericsPolicy(mode="surrogate", multiplier="trunc23"),
+    "ATxG": NumericsPolicy(mode="amsim_jnp", multiplier="afm16"),
+}
+
+
+def numpy_cpu_dense_train_step(data_x, data_y, widths, lut, M):
+    """ATxC analogue: one fwd+bwd of an MLP with every multiply through
+    the numpy LUT simulator (vectorised numpy — a *generous* stand-in for
+    the paper's per-element C loop)."""
+    rng = np.random.default_rng(0)
+    ws = [rng.standard_normal((i, o)).astype(np.float32) * (1 / i) ** 0.5
+          for i, o in zip(widths[:-1], widths[1:])]
+    x = data_x.reshape(data_x.shape[0], -1)
+
+    def mm(a, b):
+        prod = np_amsim_multiply(a[:, :, None], b[None, :, :], lut, M)
+        return prod.sum(axis=1, dtype=np.float32)
+
+    t0 = time.perf_counter()
+    acts = [x]
+    for w in ws:
+        acts.append(np.maximum(mm(acts[-1], w), 0))
+    g = acts[-1] - np.eye(widths[-1], dtype=np.float32)[data_y]
+    for i in reversed(range(len(ws))):
+        gw = mm(acts[i].T, g)
+        if i:
+            g = mm(g, ws[i].T) * (acts[i] > 0)
+        ws[i] -= 0.01 * gw
+    return time.perf_counter() - t0
+
+
+def main(models=("lenet-300-100", "lenet-5"), batch=64):
+    lut = get_lut(get_multiplier("afm16"))
+    for mname in models:
+        cfg = VISION_REGISTRY[mname]
+        data = vision_dataset(mname, 256, 64, cfg.input_hw, cfg.input_ch,
+                              cfg.n_classes)
+        b = {"x": jnp.asarray(data["x_train"][:batch]),
+             "y": jnp.asarray(data["y_train"][:batch])}
+        times = {}
+        for mode, pol in MODES.items():
+            params = init_vision(jax.random.PRNGKey(0), cfg)
+            opt = make_optimizer("sgdm", 0.05)
+            state = opt.init(params)
+            step = jax.jit(make_train_step(
+                lambda p, bb: vision_loss(p, bb, cfg, pol), opt))
+            t = time_fn(lambda: step(params, state, b))
+            times[mode] = t
+            emit(f"trainV_{mname}_{mode}", t, f"batch={batch}")
+        if cfg.kind == "mlp":
+            widths = [cfg.input_hw ** 2 * cfg.input_ch, *cfg.hidden,
+                      cfg.n_classes]
+            t_cpu = numpy_cpu_dense_train_step(
+                data["x_train"][:batch], data["y_train"][:batch],
+                widths, lut, 7)
+            times["ATxC"] = t_cpu
+            emit(f"trainV_{mname}_ATxC", t_cpu, f"batch={batch}")
+        # paper's bold ratios
+        emit(f"trainV_{mname}_ratio_ATnG/TFnG", times["ATnG"] / times["TFnG"])
+        emit(f"trainV_{mname}_ratio_ATxG/TFnG", times["ATxG"] / times["TFnG"])
+        if "ATxC" in times:
+            emit(f"trainV_{mname}_ratio_ATxC/ATxG",
+                 times["ATxC"] / times["ATxG"])
+
+
+if __name__ == "__main__":
+    main()

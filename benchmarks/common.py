@@ -1,0 +1,23 @@
+"""Shared benchmark helpers: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,44 @@
+"""Benchmark driver: one section per paper table/figure.
+
+CSV format: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_convergence,
+        bench_crossformat,
+        bench_gemm_sim,
+        bench_infer_time,
+        bench_pruning,
+        bench_roofline,
+        bench_train_time,
+    )
+
+    sections = [
+        ("Fig.6 GEMM simulation perf", bench_gemm_sim.main),
+        ("Fig.10/Table III convergence & accuracy", bench_convergence.main),
+        ("Table IV cross-format matrix", bench_crossformat.main),
+        ("Fig.11 pruning x multipliers", bench_pruning.main),
+        ("Table V training time", bench_train_time.main),
+        ("Table VI inference time", bench_infer_time.main),
+        ("Roofline table (from dry-run)", bench_roofline.main),
+    ]
+    failures = 0
+    for title, fn in sections:
+        print(f"\n# === {title} ===")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

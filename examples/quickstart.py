@@ -1,0 +1,48 @@
+"""Quickstart: the ApproxTrain flow in five steps.
+
+1. Define (or pick) an approximate-FP-multiplier functional model.
+2. Generate its mantissa-product LUT (Algorithm 1).
+3. Simulate multiplications through AMSim (Algorithm 2).
+4. Drop approximate numerics into a model via NumericsPolicy.
+5. Take a training step where every GEMM (fwd + bwd) is approximate.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amsim import amsim_multiply, np_amsim_multiply
+from repro.core.lutgen import generate_lut
+from repro.core.multipliers import get_multiplier, make_multiplier
+from repro.core.policy import NumericsPolicy
+from repro.kernels.ops import policy_matmul
+
+# -- 1. a multiplier model (the "user C/C++ code" of the paper) ------------
+afm16 = get_multiplier("afm16")          # minimally-biased log multiplier
+custom = make_multiplier("mitchell", 5)  # or build your own: M=5 Mitchell
+
+# -- 2. Algorithm 1: black-box LUT generation ------------------------------
+lut = generate_lut(afm16)
+print(f"LUT for {afm16.name}: {lut.nbytes / 1024:.1f} kB "
+      f"({lut.shape[0]} mantissa-pair entries)")
+
+# -- 3. Algorithm 2: AMSim simulation --------------------------------------
+a, b = np.float32(3.14159), np.float32(-2.71828)
+sim = np_amsim_multiply(a, b, lut, afm16.mantissa_bits)
+print(f"{a} * {b}: exact={a * b:.6f} amsim={float(sim):.6f} "
+      f"(model says {float(afm16.np_mul(a, b)):.6f})")
+assert float(sim) == float(afm16.np_mul(a, b)), "LUT must match the model"
+
+# -- 4. policy-routed linear algebra ---------------------------------------
+policy = NumericsPolicy(mode="amsim_jnp", multiplier="afm16")
+x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 8)), jnp.float32)
+w = jnp.asarray(np.random.default_rng(1).standard_normal((8, 2)), jnp.float32)
+print("exact matmul   :", np.asarray(x @ w)[0])
+print("approx matmul  :", np.asarray(policy_matmul(x, w, policy))[0])
+
+# -- 5. a training step with approximate fwd AND bwd ------------------------
+loss = lambda w: jnp.sum(policy_matmul(x, w, policy) ** 2)
+g = jax.grad(loss)(w)
+print("approx gradient:", np.asarray(g)[:2, 0])
+print("OK — see examples/train_lenet_approx.py for full training curves.")

@@ -1,0 +1,4 @@
+from repro.analysis.roofline import (  # noqa: F401
+    V5E, HardwareSpec, RooflineReport, analyze, collective_traffic,
+    model_flops_for,
+)

@@ -1,0 +1,21 @@
+"""granite-moe-3b-a800m [moe]: 32L d=1536 24H (GQA kv=8), MoE 40e top-8, d_ff=512.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+Assignment header says "MoE 40e top-8" while the trailing comment says
+"32 experts" — the structured field wins: **40 experts, top-8** (flagged
+in DESIGN.md §Arch-applicability).  d_ff=512 is the per-expert width.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    moe=MoEConfig(n_experts=40, top_k=8, d_ff=512),
+    tie_embeddings=True,
+))

@@ -1,0 +1,26 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d=5120 40H (GQA kv=8), MoE 128e top-1.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]  Llama-4-Maverick style:
+routed top-1 over 128 experts plus one always-on shared expert,
+MoE on every other layer (interleave=2), dense d_ff=8192 on the rest.
+Early-fusion multimodality is a STUB (text-token path exercised;
+``input_specs`` can prepend patch embeddings).  FSDP + Adafactor for the
+400 B total parameters.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202048,
+    moe=MoEConfig(n_experts=128, top_k=1, d_ff=8192, interleave=2,
+                  n_shared_experts=1),
+    fsdp=True,
+    optimizer="adafactor",
+    scan_block=2,  # scan over (dense, moe) layer pairs
+))

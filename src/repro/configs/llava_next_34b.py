@@ -1,0 +1,22 @@
+"""llava-next-34b [vlm]: 60L d=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]  The anyres-tiling
+vision frontend is a STUB: ``input_specs()`` provides 2880 precomputed
+patch embeddings (anyres 4+1 tiles x 576 patches) prepended to the text
+tokens; the 60L transformer backbone is what is built and sharded here.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llava-next-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    n_frontend_tokens=2880,
+    frontend="vision",
+    fsdp=True,
+))

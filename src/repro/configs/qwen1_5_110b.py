@@ -1,0 +1,20 @@
+"""qwen1.5-110b [dense]: 80L d=8192 64H (GQA kv=8) d_ff=49152 vocab=152064, QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B; hf]  Largest dense arch in the pool; FSDP + Adafactor
+so parameter/optimizer state fits 16 GB/chip on the (16,16) mesh.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab=152064,
+    qkv_bias=True,
+    fsdp=True,
+    optimizer="adafactor",
+))

@@ -1,0 +1,27 @@
+"""whisper-base [audio]: 6L enc + 6L dec, d=512, 8H MHA, d_ff=2048, vocab 51865.
+
+[arXiv:2212.04356; unverified]  Assignment lists "6L"; whisper-base is a
+6-encoder + 6-decoder model, reflected here (n_enc_layers=6, n_layers=6
+decoder).  GQA kv=8 == MHA at 8 heads.  The conv audio frontend is a STUB:
+``input_specs()`` provides precomputed frame embeddings (1500 frames, the
+30 s mel->conv output length of whisper).  Absolute positions (whisper uses
+learned/sinusoidal, not RoPE) are approximated with RoPE for code sharing —
+a numerics-irrelevant substitution for dry-run/roofline purposes.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    n_enc_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,
+    act="gelu",
+    n_frontend_tokens=1500,
+    frontend="audio",
+    scan_layers=True,
+))

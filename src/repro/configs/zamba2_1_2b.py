@@ -1,0 +1,24 @@
+"""zamba2-1.2b [hybrid]: 38L d=2048, Mamba2 backbone + shared attn blocks.
+
+[arXiv:2411.15242; hf]  38 Mamba2 layers with a *weight-shared* full
+transformer block (32H MHA, kv=32; d_ff=8192) applied every 6 layers
+(Zamba2's shared-block design).  ssm_state=64.  For the ``long_500k``
+cell the shared attention runs with a 4096 sliding window so the cell is
+sub-quadratic (adaptation noted in DESIGN.md — Zamba2 itself uses full
+attention at its native 4k context).
+"""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+CONFIG = register(ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    ssm=SSMConfig(d_state=64),
+    attn_every=6,
+    sliding_window=4096,
+))

@@ -1,0 +1,16 @@
+"""Core ApproxTrain numerics: multiplier models, LUT flow, AMSim, policy."""
+from .multipliers import (  # noqa: F401
+    AFM16,
+    AFM32,
+    BF16,
+    FP32,
+    MIT16,
+    REALM16,
+    Multiplier,
+    get_multiplier,
+    make_multiplier,
+)
+from .lutgen import generate_lut, get_lut  # noqa: F401
+from .amsim import amsim_multiply, np_amsim_multiply  # noqa: F401
+from .policy import NATIVE, NumericsPolicy, policy_from_flags  # noqa: F401
+from .quantize import quantize_format  # noqa: F401

@@ -1,0 +1,63 @@
+"""Algorithm 2: AMSim — LUT-based approximate FP multiplication (paper §V-B).
+
+Elementwise simulator: given FP32 operands and the mantissa-product LUT
+from Algorithm 1, produce the approximate product.  Three steps (paper):
+  1. fetch mantissa product (+carry) from the LUT,
+  2. compute sign (XOR) and exponent (ea + eb - 127 + carry) exactly,
+  3. concatenate; flush-to-zero on underflow/zero input, inf on overflow.
+
+``amsim_multiply``  — jnp version (jit/vmap-able; also the body used by
+                      the Pallas GEMM kernel in interpret and TPU mode).
+``np_amsim_multiply`` — numpy version (the CPU "ATxC" baseline of
+                      Tables V/VI and the LUT-correctness oracle).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .float_bits import MNT_BITS, jnp_bits, jnp_float, np_bits, np_float
+
+
+def _amsim(ua, ub, lut, M: int, xp):
+    """Shared Alg. 2 body over uint32 words; xp is numpy or jnp."""
+    mnt_mask = xp.uint32(0x007F_FFFF)
+    amnt = ua & mnt_mask
+    bmnt = ub & mnt_mask
+    # Index = concat(top-M bits of A mantissa, top-M bits of B mantissa)
+    # (paper line 8; written shift-then-or so it also works for M=12).
+    idx = ((amnt >> xp.uint32(MNT_BITS - M)) << xp.uint32(M)) | (
+        bmnt >> xp.uint32(MNT_BITS - M)
+    )
+    if xp is np:
+        entry = lut[idx]
+    else:
+        entry = jnp.take(lut, idx.astype(jnp.int32), indices_are_sorted=False)
+    carry = (entry >> xp.uint32(MNT_BITS)) & xp.uint32(1)  # line 9
+    mnt = entry & mnt_mask  # line 10
+    sign = ((ua ^ ub) >> xp.uint32(31)).astype(xp.uint32)  # line 11
+    ea = (ua >> xp.uint32(MNT_BITS)) & xp.uint32(0xFF)
+    eb = (ub >> xp.uint32(MNT_BITS)) & xp.uint32(0xFF)
+    e = ea.astype(xp.int32) + eb.astype(xp.int32) - 127  # line 12
+    zero = (e <= 0) | (ea == 0) | (eb == 0)  # line 13
+    e = e + carry.astype(xp.int32)  # line 18
+    inf = (e >= 255) & ~zero  # line 15
+    e = xp.clip(e, 0, 255).astype(xp.uint32)
+    out = (sign << xp.uint32(31)) | (e << xp.uint32(MNT_BITS)) | mnt  # line 19
+    out = xp.where(inf, (sign << xp.uint32(31)) | xp.uint32(0x7F80_0000), out)
+    out = xp.where(zero, sign << xp.uint32(31), out)  # signed zero
+    return out
+
+
+def amsim_multiply(a, b, lut, M: int):
+    """Approximate product of broadcastable f32 arrays ``a``, ``b`` (jnp)."""
+    a, b = jnp.broadcast_arrays(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
+    lut = jnp.asarray(lut, jnp.uint32)
+    return jnp_float(_amsim(jnp_bits(a), jnp_bits(b), lut, M, jnp))
+
+
+def np_amsim_multiply(a, b, lut, M: int):
+    """numpy twin of ``amsim_multiply`` (CPU simulation baseline)."""
+    a, b = np.broadcast_arrays(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    lut = np.asarray(lut, np.uint32)
+    return np_float(_amsim(np_bits(a), np_bits(b), lut, M, np))

@@ -1,0 +1,139 @@
+"""Bit-level IEEE-754 FP32 helpers (numpy + jnp twins).
+
+The ApproxTrain numerics stack manipulates floats as raw uint32 words:
+    [ sign:1 | exponent:8 | mantissa:23 ]
+All functional multiplier models (``multipliers.py``), the LUT generator
+(``lutgen.py``, paper Alg. 1) and the AMSim evaluator (``amsim.py``, paper
+Alg. 2) are built from these primitives.
+
+Two parallel implementations are provided:
+  * numpy  (``np_*``)  — used offline by the LUT generator and the
+    "direct C simulation" baseline; vectorised over arrays.
+  * jnp    (``jnp_*``) — used inside jit/pallas for on-device simulation.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- constants
+SIGN_MASK = np.uint32(0x8000_0000)
+EXP_MASK = np.uint32(0x7F80_0000)
+MNT_MASK = np.uint32(0x007F_FFFF)
+CARRY_BIT = np.uint32(0x0080_0000)  # bit 23: LUT carry flag (paper Alg. 1 l.14)
+EXP_BIAS = 127
+MNT_BITS = 23
+
+
+# ---------------------------------------------------------------- numpy side
+def np_bits(x) -> np.ndarray:
+    """float32 array -> uint32 bit pattern."""
+    return np.asarray(x, dtype=np.float32).view(np.uint32)
+
+
+def np_float(u) -> np.ndarray:
+    """uint32 bit pattern -> float32 array."""
+    return np.asarray(u, dtype=np.uint32).view(np.float32)
+
+
+def np_sign(u) -> np.ndarray:
+    return (u & SIGN_MASK) >> np.uint32(31)
+
+
+def np_exp(u) -> np.ndarray:
+    """Biased exponent field (0..255)."""
+    return (u & EXP_MASK) >> np.uint32(MNT_BITS)
+
+
+def np_mnt(u) -> np.ndarray:
+    """23-bit mantissa field."""
+    return u & MNT_MASK
+
+
+def np_pack(sign, exp, mnt) -> np.ndarray:
+    """Assemble (sign, biased-exp, mantissa-field) -> uint32 word."""
+    sign = np.asarray(sign, np.uint32)
+    exp = np.asarray(exp, np.uint32)
+    mnt = np.asarray(mnt, np.uint32)
+    return (sign << np.uint32(31)) | (exp << np.uint32(MNT_BITS)) | (mnt & MNT_MASK)
+
+
+def np_truncate_mantissa(x, m: int) -> np.ndarray:
+    """Keep the top ``m`` mantissa bits of float32 ``x`` (truncation, no round).
+
+    This realises the (1, 8, m) storage format of Table II by zeroing the
+    low 23-m mantissa bits. m=23 is the identity.
+    """
+    if m >= MNT_BITS:
+        return np.asarray(x, np.float32)
+    keep = np.uint32(0xFFFF_FFFF) << np.uint32(MNT_BITS - m)
+    return np_float(np_bits(x) & keep)
+
+
+def np_round_mantissa(x, m: int) -> np.ndarray:
+    """Round-to-nearest-even the mantissa of float32 ``x`` to ``m`` bits.
+
+    Used for the bfloat16 reference multiplier (hardware bf16 units round)."""
+    if m >= MNT_BITS:
+        return np.asarray(x, np.float32)
+    u = np_bits(x).astype(np.uint64)
+    shift = MNT_BITS - m
+    half = np.uint64(1 << (shift - 1))
+    lsb = (u >> np.uint64(shift)) & np.uint64(1)
+    u = u + half - np.uint64(1) + lsb  # RNE trick
+    u = (u >> np.uint64(shift)) << np.uint64(shift)
+    return np_float(u.astype(np.uint32))
+
+
+# ----------------------------------------------------------------- jnp side
+def jnp_bits(x):
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+
+
+def jnp_float(u):
+    return jax.lax.bitcast_convert_type(u.astype(jnp.uint32), jnp.float32)
+
+
+def jnp_sign(u):
+    return (u & jnp.uint32(0x8000_0000)) >> jnp.uint32(31)
+
+
+def jnp_exp(u):
+    return (u & jnp.uint32(0x7F80_0000)) >> jnp.uint32(MNT_BITS)
+
+
+def jnp_mnt(u):
+    return u & jnp.uint32(0x007F_FFFF)
+
+
+def jnp_pack(sign, exp, mnt):
+    return (
+        (sign.astype(jnp.uint32) << jnp.uint32(31))
+        | (exp.astype(jnp.uint32) << jnp.uint32(MNT_BITS))
+        | (mnt.astype(jnp.uint32) & jnp.uint32(0x007F_FFFF))
+    )
+
+
+def jnp_truncate_mantissa(x, m: int):
+    if m >= MNT_BITS:
+        return x.astype(jnp.float32)
+    keep = jnp.uint32((0xFFFF_FFFF << (MNT_BITS - m)) & 0xFFFF_FFFF)
+    return jnp_float(jnp_bits(x) & keep)
+
+
+def jnp_round_mantissa(x, m: int):
+    """RNE mantissa rounding in jnp (matches np_round_mantissa).
+
+    uint32-only (x64 mode not required): u + half cannot overflow uint32
+    for any non-NaN float32 bit pattern since half < 2^22.
+    """
+    if m >= MNT_BITS:
+        return x.astype(jnp.float32)
+    u = jnp_bits(x)
+    shift = MNT_BITS - m
+    half = jnp.uint32(1 << (shift - 1))
+    lsb = (u >> jnp.uint32(shift)) & jnp.uint32(1)
+    u = u + half - jnp.uint32(1) + lsb
+    u = (u >> jnp.uint32(shift)) << jnp.uint32(shift)
+    return jnp_float(u)

@@ -1,0 +1,311 @@
+"""Functional models of approximate FP multipliers (paper §III-B, §V).
+
+These play the role of the *user-provided C/C++ functional models* in the
+paper: black boxes that take two FP32 numbers and return the approximate
+FP32 product.  The LUT generator (``lutgen.py``) treats them opaquely,
+exactly as Algorithm 1 treats ``approx_mul``.
+
+Every model here follows the structural assumption the paper leans on
+(§V, observation 1): **only the mantissa product is approximated** — sign
+and exponent are computed exactly (plus a carry from mantissa overflow).
+
+Implemented families (each with a genuinely different internal mantissa
+procedure, to exercise the black-box LUT flow):
+
+  exact          exact FP32 multiply (reference / "native")
+  trunc<M>       inputs truncated to M mantissa bits, exact mantissa
+                 product, result truncated to M bits  (bfloat16-like when
+                 M=7 with truncation rounding)
+  bf16           M=7 with round-to-nearest-even (hardware bfloat16)
+  mitchell<M>    Mitchell's logarithmic multiplier [25]: (1+ma)(1+mb) ~=
+                 1+ma+mb  (drops the ma*mb term)
+  afm<M>         AFM-style *minimally-biased* log multiplier in the spirit
+                 of Saadat et al. [29]: Mitchell plus a constant bias
+                 compensation of E[dropped term] = 1/12, which zeroes the
+                 mean error over uniform mantissas
+  realm<M>       REALM-style *reduced-error* log multiplier in the spirit
+                 of [30]: piecewise correction of the log/antilog
+                 approximation via an 8-segment error-compensation table
+
+Fidelity note (recorded in DESIGN.md): mitchell/afm/realm here are
+representative re-implementations of the published *families*, not
+gate-level-exact replicas of [29]/[30] — the paper's own contribution
+(the LUT flow + framework) is agnostic to the multiplier internals, which
+is precisely what these distinct models exercise.
+
+Each model's mantissa core is written against an ``xp`` module so the same
+arithmetic runs under numpy (LUT generation; "direct C sim" CPU baseline)
+and jnp (the GPU/TPU "direct simulation" baseline of Fig. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from .float_bits import (
+    MNT_BITS,
+    MNT_MASK,
+    np_bits,
+    np_float,
+    np_pack,
+    jnp_bits,
+    jnp_float,
+    jnp_pack,
+)
+
+_MNT_ONE = 1 << MNT_BITS  # implicit leading 1 in fixed-point mantissa
+
+
+# =====================================================================
+# Mantissa cores.
+# Inputs:  ma, mb — uint32 23-bit mantissa *fields* (already truncated to
+#          the model's M significant bits).
+# Output:  (mnt_field, carry) — uint32 23-bit result mantissa field and
+#          a 0/1 carry indicating the true product's exponent is
+#          ea+eb-127+1 (i.e. mantissa product >= 2.0).
+# All arithmetic is integer fixed-point with 23 fractional bits so numpy
+# and jnp produce bit-identical results.
+# =====================================================================
+
+def _core_exact(ma, mb, M, xp, round_result=False):
+    """Exact mantissa product (1.ma * 1.mb), truncated or RNE-rounded to M bits.
+
+    Fixed point: p = (2^23+ma)(2^23+mb) is Q2.46, value in [2^46, 2^48).
+    carry = (p >= 2^47) means the true product mantissa is in [2, 4).
+    """
+    a = ma.astype(xp.uint64) + xp.uint64(_MNT_ONE)
+    b = mb.astype(xp.uint64) + xp.uint64(_MNT_ONE)
+    p = a * b
+    carry = (p >> xp.uint64(2 * MNT_BITS + 1)).astype(xp.uint32)
+    # Bit position of the M-bit result LSB within p:
+    tot = (xp.uint64(2 * MNT_BITS - M) + carry.astype(xp.uint64))
+    if round_result:
+        # RNE at the M-bit granularity of the *normalised* mantissa.
+        half = xp.uint64(1) << (tot - xp.uint64(1))
+        lsb = (p >> tot) & xp.uint64(1)
+        p = p + half - xp.uint64(1) + lsb
+        # Rounding can only bump carry 0 -> 1 (see tests); renormalise.
+        carry2 = (p >> xp.uint64(2 * MNT_BITS + 1)).astype(xp.uint32)
+        tot = tot + (carry2 - carry).astype(xp.uint64)
+        carry = carry2
+    mnt = (((p >> tot) << xp.uint64(MNT_BITS - M)) & xp.uint64(MNT_MASK)).astype(
+        xp.uint32
+    )
+    return mnt, carry
+
+
+def _core_mitchell(ma, mb, M, xp):
+    """Mitchell log multiplier: (1+ma)(1+mb) ~ 2^carry * (1+frac)."""
+    s = ma.astype(xp.uint32) + mb.astype(xp.uint32)  # Q0.23 sum, < 2^24
+    carry = (s >> xp.uint32(MNT_BITS)).astype(xp.uint32)
+    mnt = s & xp.uint32(MNT_MASK)
+    if M < MNT_BITS:
+        keep = xp.uint32((0xFFFF_FFFF << (MNT_BITS - M)) & 0xFFFF_FFFF)
+        mnt = mnt & keep
+    return mnt, carry
+
+
+# Minimal-bias compensation: Mitchell drops ma*mb (s<1) / (1-ma)(1-mb)
+# (s>=1), each with mean 1/12 over uniform mantissas.  Adding 1/12
+# zero-means the error (the "minimally biased" idea of [29]).
+_AFM_C = int(round(_MNT_ONE / 12.0))
+
+
+def _core_afm(ma, mb, M, xp):
+    s = ma.astype(xp.uint32) + mb.astype(xp.uint32) + xp.uint32(_AFM_C)
+    # Saturate at the format maximum (carry=1, mantissa all-ones): the FP
+    # result has a single exponent increment available, and hardware
+    # minimally-biased designs cap the compensation rather than wrap.
+    s = xp.minimum(s, xp.uint32((1 << (MNT_BITS + 1)) - 1))
+    carry = (s >> xp.uint32(MNT_BITS)).astype(xp.uint32)
+    mnt = s & xp.uint32(MNT_MASK)
+    if M < MNT_BITS:
+        keep = xp.uint32((0xFFFF_FFFF << (MNT_BITS - M)) & 0xFFFF_FFFF)
+        mnt = mnt & keep
+    return mnt, carry
+
+
+# REALM-style: piecewise error compensation on the Mitchell sum.  The
+# dropped term e(s) depends on where (ma, mb) lies; conditioned on the sum
+# s the expected dropped term is E[ma*mb | ma+mb=s] which is a quadratic
+# in s.  We compensate with an 8-segment piecewise-constant table over s
+# (distinct internal structure vs AFM's single constant -> genuinely
+# different LUT contents).
+def _realm_table():
+    segs = []
+    for i in range(8):
+        lo, hi = i / 8.0, (i + 1) / 8.0
+        # s in [0,2); segment over s/2.  E[dropped | s] for s<1 is s^2/6
+        # (uniform on the simplex slice), for s>=1 it is (2-s)^2/6.
+        smid = lo + hi  # midpoint of s = 2*(seg midpoint)
+        e = (smid**2) / 6.0 if smid < 1.0 else ((2.0 - smid) ** 2) / 6.0
+        segs.append(int(round(e * _MNT_ONE)))
+    return segs
+
+
+_REALM_SEGS = _realm_table()
+
+
+def _core_realm(ma, mb, M, xp):
+    s = ma.astype(xp.uint32) + mb.astype(xp.uint32)  # Q1.23 in [0, 2)
+    seg = (s >> xp.uint32(MNT_BITS - 2)) & xp.uint32(0x7)  # top-3 bits of s/2
+    table = xp.asarray(_REALM_SEGS, dtype=xp.uint32)
+    corr = table[seg] if xp is np else xp.take(table, seg.astype(xp.int32))
+    s = s + corr
+    s = xp.minimum(s, xp.uint32((1 << (MNT_BITS + 1)) - 1))  # saturate (see AFM)
+    carry = (s >> xp.uint32(MNT_BITS)).astype(xp.uint32)
+    mnt = s & xp.uint32(MNT_MASK)
+    if M < MNT_BITS:
+        keep = xp.uint32((0xFFFF_FFFF << (MNT_BITS - M)) & 0xFFFF_FFFF)
+        mnt = mnt & keep
+    return mnt, carry
+
+
+# =====================================================================
+# Full FP multiply wrapper: exact sign/exponent + a mantissa core.
+# Matches AMSim's special-case semantics (paper Alg. 2): flush-to-zero on
+# exponent underflow or zero input, +/-inf on overflow.
+# =====================================================================
+
+def _full_multiply(core, a, b, M, xp):
+    if xp is np:
+        ua, ub = np_bits(a), np_bits(b)
+        pack, tofloat = np_pack, np_float
+    else:
+        ua, ub = jnp_bits(a), jnp_bits(b)
+        pack, tofloat = jnp_pack, jnp_float
+    keep = xp.uint32((0xFFFF_FFFF << (MNT_BITS - M)) & 0xFFFF_FFFF) if M < MNT_BITS else xp.uint32(0xFFFF_FFFF)
+    ma = ua & xp.uint32(MNT_MASK) & keep
+    mb = ub & xp.uint32(MNT_MASK) & keep
+    ea = (ua >> xp.uint32(MNT_BITS)) & xp.uint32(0xFF)
+    eb = (ub >> xp.uint32(MNT_BITS)) & xp.uint32(0xFF)
+    sign = ((ua ^ ub) >> xp.uint32(31)).astype(xp.uint32)
+    mnt, carry = core(ma, mb, M, xp)
+    e = ea.astype(xp.int32) + eb.astype(xp.int32) - 127 + carry.astype(xp.int32)
+    zero = (e <= 0) | (ea == 0) | (eb == 0)
+    inf = (e >= 255) & ~zero
+    e = xp.clip(e, 0, 255).astype(xp.uint32)
+    out = pack(sign, e, mnt)
+    out = xp.where(inf, pack(sign, xp.uint32(255), xp.uint32(0)), out)
+    out = xp.where(zero, pack(sign, xp.uint32(0), xp.uint32(0)), out)
+    return tofloat(out)
+
+
+# =====================================================================
+# Public registry
+# =====================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Multiplier:
+    """A functional approximate-FP-multiplier model.
+
+    ``np_mul(a, b)`` is the numpy "user C model" consumed by Algorithm 1;
+    ``jnp_mul(a, b)`` is the direct-simulation twin (Fig. 6 baseline).
+    ``mantissa_bits`` is M, the number of *significant* mantissa bits of
+    the format (Table II: FP32 -> 23, bfloat16-like -> 7).
+    """
+
+    name: str
+    mantissa_bits: int
+    np_mul: Callable
+    jnp_mul: Callable
+    exact_family: bool = False  # mantissa product exact up to truncation?
+
+    def __call__(self, a, b):
+        return self.np_mul(a, b)
+
+
+_CORES = {
+    "exact": partial(_core_exact, round_result=True),  # IEEE RNE == native
+    "trunc": partial(_core_exact, round_result=False),
+    "bf16": partial(_core_exact, round_result=True),
+    "mitchell": _core_mitchell,
+    "afm": _core_afm,
+    "realm": _core_realm,
+}
+_EXACT_FAMILY = {"exact", "trunc", "bf16"}
+
+
+def _jnp_exact_family_mul(family: str, M: int, a, b):
+    """jnp twin for the exact-mantissa family, in the float domain.
+
+    jnp under default x64-disabled config has no uint64, so the 48-bit
+    fixed-point product of ``_core_exact`` cannot be formed bitwise.
+    Instead: quantize operands to M bits, multiply in f32 (EXACT for
+    M <= 11: (M+1)-bit significand products fit f32's 24-bit mantissa),
+    quantize the product.  For M=23 'exact' this is the IEEE multiply
+    itself.  M in [12, 22] non-exact corner documented; LUTs cap at 12.
+    """
+    from .float_bits import jnp_round_mantissa, jnp_truncate_mantissa
+
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if family == "exact" or (family == "bf16" and M >= 23):
+        return a * b
+    # Operand conversion is truncation (paper §VII: "bit-truncation");
+    # only the final product is rounded (bf16) or truncated (trunc).
+    qr = jnp_round_mantissa if family == "bf16" else jnp_truncate_mantissa
+    return qr(jnp_truncate_mantissa(a, M) * jnp_truncate_mantissa(b, M), M)
+
+
+def make_multiplier(family: str, mantissa_bits: int = 23) -> Multiplier:
+    """Build a multiplier model. ``family`` in {exact, trunc, bf16,
+    mitchell, afm, realm}; ``mantissa_bits`` = M in [1, 23]."""
+    if family not in _CORES:
+        raise ValueError(f"unknown multiplier family {family!r}; have {sorted(_CORES)}")
+    if not 1 <= mantissa_bits <= 23:
+        raise ValueError(f"mantissa_bits must be in [1,23], got {mantissa_bits}")
+    core = _CORES[family]
+    if family in _EXACT_FAMILY:
+        jnp_mul = partial(_jnp_exact_family_mul, family, mantissa_bits)
+    else:
+        jnp_mul = lambda a, b: _full_multiply(core, a, b, mantissa_bits, jnp)
+    return Multiplier(
+        name=f"{family}{mantissa_bits}",
+        mantissa_bits=mantissa_bits,
+        np_mul=lambda a, b: _full_multiply(core, a, b, mantissa_bits, np),
+        jnp_mul=jnp_mul,
+        exact_family=family in _EXACT_FAMILY,
+    )
+
+
+# Canonical instances used throughout the paper's experiments (Table II).
+FP32 = make_multiplier("exact", 23)
+BF16 = make_multiplier("bf16", 7)
+AFM32 = make_multiplier("afm", 23)
+AFM16 = make_multiplier("afm", 7)
+MIT16 = make_multiplier("mitchell", 7)
+REALM16 = make_multiplier("realm", 7)
+
+REGISTRY = {m.name: m for m in [FP32, BF16, AFM32, AFM16, MIT16, REALM16]}
+# Table II / Fig. 6 bit-WIDTH aliases: "<name>16" = (1,8,7) format (M=7),
+# "<name>32" = (1,8,23) (M=23).  Distinct from the internal '<family><M>'
+# scheme, which get_multiplier falls back to.
+REGISTRY.update({
+    "fp32": FP32,
+    "bf16": BF16,
+    "afm32": AFM32,
+    "afm16": AFM16,
+    "mit16": MIT16,
+    "mitchell16": MIT16,
+    "realm16": REALM16,
+    "mit32": make_multiplier("mitchell", 23),
+    "realm32": make_multiplier("realm", 23),
+    "trunc16": make_multiplier("trunc", 7),
+})
+
+
+def get_multiplier(name: str) -> Multiplier:
+    """Look up a canonical multiplier or parse '<family><M>' (e.g. 'afm7')."""
+    if name in REGISTRY:
+        return REGISTRY[name]
+    for fam in _CORES:
+        if name.startswith(fam):
+            suffix = name[len(fam):]
+            if suffix.isdigit():
+                return make_multiplier(fam, int(suffix))
+    raise ValueError(f"unknown multiplier {name!r}")

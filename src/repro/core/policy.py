@@ -1,0 +1,103 @@
+"""NumericsPolicy — the framework-wide dispatch point for multiplications.
+
+This is the JAX/TPU analogue of the paper's AMDENSE/AMCONV2D drop-in ops
+(§VI): every matmul in every model layer goes through ``policy.matmul``,
+which routes to one of five execution modes:
+
+  native      exact f32, XLA-native dot -> MXU.  (the "TFnG" baseline)
+  surrogate   operands mantissa-truncated to M bits, then native MXU dot.
+              For the *truncation family* of multipliers (exact mantissa
+              product of truncated operands) this is numerics-equivalent
+              per-multiply up to the final rounding of the exact product,
+              while running at full MXU speed — this is the beyond-paper
+              mode that lets the same policy scale to 512-chip training.
+  amsim       LUT-based simulation in the Pallas GEMM kernel (the paper's
+              AMSim integrated at the kernel level; "ATxG" analogue).
+  amsim_jnp   LUT-based simulation in pure jnp (portable oracle).
+  direct      direct bit-manipulation simulation of the multiplier model
+              in jnp (the paper's "direct C simulation" baseline, Fig. 6).
+
+Accumulation is always FP32 (paper §VII).  The policy object is a small
+frozen dataclass so it can be a static argument under jit; LUTs are
+fetched from a process-level cache at trace time and embedded as
+constants (64 KiB for M=7).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .multipliers import get_multiplier
+
+MODES = ("native", "surrogate", "amsim", "amsim_jnp", "direct")
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    """Numerics configuration threaded through every model layer."""
+
+    mode: str = "native"
+    multiplier: str = "fp32"
+    # Approximate the attention score/value matmuls too (the paper's
+    # AMCONV2D/AMDENSE cover layer weights; MultiHeadAttention "involves
+    # matrix multiplication under the hood" — we expose the choice).
+    approx_attention: bool = True
+    # Approximate backprop matmuls (paper: yes, both phases).
+    approx_backward: bool = True
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.mode != "native":
+            m = get_multiplier(self.multiplier)  # validates
+            if self.mode == "surrogate" and not m.exact_family:
+                raise ValueError(
+                    f"surrogate mode is only numerics-equivalent for the "
+                    f"truncation family; {m.name} is log-based — use amsim/direct"
+                )
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def mantissa_bits(self) -> int:
+        return get_multiplier(self.multiplier).mantissa_bits
+
+    @property
+    def is_native(self) -> bool:
+        return self.mode == "native" or self.multiplier in ("fp32", "exact23")
+
+    def for_attention(self) -> "NumericsPolicy":
+        """Policy used inside attention: native if approx_attention=False."""
+        if self.approx_attention or self.is_native:
+            return self
+        return dataclasses.replace(self, mode="native")
+
+    # ------------------------------------------------------------- dispatch
+    def matmul(self, a, b):
+        """Batched matmul  (..., m, k) @ (..., k, n) -> (..., m, n).
+
+        Differentiable; in approx modes the backward pass also uses
+        approximate multiplies (custom_vjp in kernels/ops.py) unless
+        ``approx_backward`` is False.
+        """
+        from repro.kernels.ops import policy_matmul  # local: avoid cycle
+
+        return policy_matmul(a, b, self)
+
+    def einsum(self, spec: str, a, b):
+        """Einsum routed through the policy.
+
+        Native mode lowers to jnp.einsum directly; approx modes support
+        any spec expressible as a batched matmul (rewritten via
+        reshape/transpose by kernels/ops.py).
+        """
+        from repro.kernels.ops import policy_einsum
+
+        return policy_einsum(spec, a, b, self)
+
+
+NATIVE = NumericsPolicy()
+
+
+def policy_from_flags(mode: str = "native", multiplier: str = "fp32", **kw) -> NumericsPolicy:
+    return NumericsPolicy(mode=mode, multiplier=multiplier, **kw)

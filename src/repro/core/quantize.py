@@ -1,0 +1,40 @@
+"""Format casts for (1, 8, m) floating-point storage formats (Table II).
+
+All formats share FP32's sign/exponent layout, so conversion is pure
+mantissa truncation/rounding (paper §VII "type-conversion is simply a
+matter of bit-truncation or bit-extension").  Accumulation is always
+FP32 (mixed-precision de-facto standard, §VII).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .float_bits import (
+    jnp_round_mantissa,
+    jnp_truncate_mantissa,
+    np_round_mantissa,
+    np_truncate_mantissa,
+)
+
+
+def quantize_format(x, mantissa_bits: int, rounding: str = "truncate"):
+    """Cast array ``x`` to the (1, 8, mantissa_bits) format, kept in f32."""
+    if rounding == "truncate":
+        fn = np_truncate_mantissa if isinstance(x, np.ndarray) else jnp_truncate_mantissa
+    elif rounding == "nearest":
+        fn = np_round_mantissa if isinstance(x, np.ndarray) else jnp_round_mantissa
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    return fn(x, mantissa_bits)
+
+
+def stochastic_round_format(x, mantissa_bits: int, key):
+    """Stochastic mantissa rounding (beyond-paper; useful for low-M training)."""
+    if mantissa_bits >= 23:
+        return x.astype(jnp.float32)
+    ulp = jnp.abs(jnp_truncate_mantissa(x, mantissa_bits)) * (2.0 ** (-mantissa_bits))
+    import jax
+
+    noise = jax.random.uniform(key, x.shape, jnp.float32) * ulp
+    return jnp_truncate_mantissa(x + jnp.sign(x) * noise, mantissa_bits)

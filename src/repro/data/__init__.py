@@ -1,0 +1,1 @@
+from repro.data.pipeline import lm_batch, lm_input_specs, vision_batches, vision_dataset  # noqa: F401

@@ -1,0 +1,106 @@
+"""Deterministic, step-indexed synthetic data pipelines.
+
+Step-indexed means *stateless*: batch(step) is a pure function of the
+step counter, so an elastic restart from checkpoint step N continues with
+exactly the batches N, N+1, ... — no sample double-counted and no
+iterator state to checkpoint (DESIGN.md §5 fault tolerance).
+
+Vision data is synthetic-but-learnable: fixed class prototypes + noise,
+so the paper's convergence experiments (Fig. 10) exercise real learning
+dynamics on CPU without dataset downloads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+# ---------------------------------------------------------------- LM side
+def lm_batch(cfg: ArchConfig, shape: ShapeConfig, step: int, *,
+             batch_override: int | None = None, seq_override: int | None = None):
+    """Synthetic next-token LM batch for a given global step (jit-able)."""
+    B = batch_override or shape.global_batch
+    S = seq_override or shape.seq_len
+    key = jax.random.fold_in(jax.random.PRNGKey(1234), step)
+    # encdec: frames feed the encoder, decoder keeps the full seq_len;
+    # decoder-only frontends (vlm/audio-LM) consume seq positions.
+    if cfg.family == "encdec" or not cfg.n_frontend_tokens:
+        text_len = S
+    else:
+        text_len = S - cfg.n_frontend_tokens
+    # Markov-ish synthetic text: mixture of local structure + noise so the
+    # loss is learnable but not trivially zero.
+    base = jax.random.randint(key, (B, text_len), 0, cfg.vocab, jnp.int32)
+    shifted = jnp.roll(base, 1, axis=1) % cfg.vocab
+    mix = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, base.shape)
+    tokens = jnp.where(mix, shifted, base)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((B, 1), -1, jnp.int32)], axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.n_frontend_tokens:
+        batch["embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+def lm_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for every train-step input (dry-run)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec" or not cfg.n_frontend_tokens:
+        text_len = S
+    else:
+        text_len = S - cfg.n_frontend_tokens
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((B, text_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, text_len), jnp.int32),
+    }
+    if cfg.n_frontend_tokens:
+        spec["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return spec
+
+
+# ------------------------------------------------------------- vision side
+_PROTO_CACHE: dict = {}
+
+
+def vision_dataset(name: str, n_train: int, n_test: int, hw: int, ch: int,
+                   n_classes: int, noise: float = 0.35, seed: int = 0):
+    """Synthetic learnable image dataset: class prototypes + gaussian noise.
+
+    Returns dict of numpy arrays {x_train, y_train, x_test, y_test} in
+    NHWC [0, 1].  Deterministic in (name, seed).
+    """
+    key = (name, hw, ch, n_classes, seed)
+    if key not in _PROTO_CACHE:
+        rng = np.random.default_rng(abs(hash(key)) % (2**32))
+        protos = rng.uniform(0, 1, (n_classes, hw, hw, ch)).astype(np.float32)
+        # low-pass the prototypes so they have learnable spatial structure
+        for _ in range(2):
+            protos = (protos + np.roll(protos, 1, 1) + np.roll(protos, 1, 2)) / 3
+        _PROTO_CACHE[key] = (protos, rng)
+    protos, rng = _PROTO_CACHE[key]
+
+    def make(n, salt):
+        r = np.random.default_rng((abs(hash(key)) + salt) % (2**32))
+        y = r.integers(0, n_classes, n).astype(np.int32)
+        x = protos[y] + r.normal(0, noise, (n, hw, hw, ch)).astype(np.float32)
+        return np.clip(x, 0, 1).astype(np.float32), y
+
+    x_train, y_train = make(n_train, 1)
+    x_test, y_test = make(n_test, 2)
+    return {"x_train": x_train, "y_train": y_train,
+            "x_test": x_test, "y_test": y_test}
+
+
+def vision_batches(data, batch: int, epoch: int, seed: int = 0):
+    """Deterministic epoch shuffling; yields {"x","y"} numpy batches."""
+    n = data["x_train"].shape[0]
+    order = np.random.default_rng(seed + epoch).permutation(n)
+    for i in range(0, n - batch + 1, batch):
+        idx = order[i : i + batch]
+        yield {"x": data["x_train"][idx], "y": data["y_train"][idx]}

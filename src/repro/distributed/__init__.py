@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_pspec, cache_pspecs, data_axes, lm_param_pspecs, opt_state_pspecs,
+    to_shardings,
+)
+from repro.distributed.compression import (  # noqa: F401
+    compressed_psum, dequantize_int8, init_ef_state, quantize_int8,
+)

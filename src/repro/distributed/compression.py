@@ -1,0 +1,75 @@
+"""Int8 gradient compression with error feedback (beyond-paper, DESIGN §5).
+
+Block-quantizes gradients to int8 before the data-parallel all-reduce and
+carries the quantization error into the next step (error feedback), so
+compression noise behaves like a bounded delay rather than a bias.
+
+Wire format per block of 256 values: int8 payload + one f32 scale
+(≈ 3.9x compression vs f32).  Scales are pmax-synchronized across the
+axis, then the int8 payload is psum'd as int32 (exact for < 2^23
+devices) and dequantized with the shared scale — bit-faithful to a real
+int8 all-reduce.  Off by default; validated in tests on the
+host-platform multi-device backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _blockify(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def quantize_int8(x, scale=None):
+    """x -> (q int8 blocks, f32 scale per block, pad)."""
+    blocks, pad = _blockify(x.astype(jnp.float32))
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+                            / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def dequantize_int8(q, scale, pad, shape):
+    x = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        x = x[:-pad]
+    return x.reshape(shape)
+
+
+def compressed_psum(grads, ef_state, axis_name: str):
+    """Mean-all-reduce ``grads`` over ``axis_name`` with int8+EF compression.
+
+    Must run inside shard_map/pmap with ``axis_name`` bound.
+    Returns (mean_grads, new_ef_state).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, ef):
+        g_eff = g.astype(jnp.float32) + ef
+        blocks, pad = _blockify(g_eff)
+        local_scale = jnp.maximum(
+            jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0, 1e-12)
+        scale = jax.lax.pmax(local_scale, axis_name)   # shared wire scale
+        q, _, _ = quantize_int8(g_eff, scale)
+        new_ef = g_eff - dequantize_int8(q, scale, pad, g.shape)
+        summed_q = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = dequantize_int8(summed_q, scale, pad, g.shape) / n
+        return mean, new_ef
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def init_ef_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

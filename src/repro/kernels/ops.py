@@ -1,0 +1,288 @@
+"""jit'd public wrappers around the approximate-GEMM kernels.
+
+This module is the JAX analogue of the paper's AMDENSE/AMCONV2D custom TF
+ops (§VI): differentiable matmul / einsum / conv2d primitives whose forward
+*and backward* multiplications are routed through the approximate-multiplier
+simulation selected by a ``NumericsPolicy``.
+
+Execution modes (policy.mode):
+  native     jnp dot -> MXU, exact f32               ("TFnG" baseline)
+  surrogate  mantissa-truncate operands, native dot  (beyond-paper fast path,
+             numerics-equivalent for the truncation family)
+  amsim      Pallas LUT-GEMM kernel                  ("ATxG" analogue)
+  amsim_jnp  pure-jnp LUT simulation                 (portable oracle)
+  direct     pure-jnp bit-manipulation of the model  ("direct C sim", Fig. 6)
+
+Differentiation: ``policy_matmul`` / ``policy_einsum`` / ``approx_conv2d``
+carry a ``jax.custom_vjp`` so the backward pass performs the *same kind* of
+approximate multiplications (paper: approximate multipliers in both forward
+and backpropagation), unless ``policy.approx_backward`` is False, in which
+case gradients use native exact matmuls.
+
+Accumulation is always f32 (paper §VII).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.float_bits import jnp_truncate_mantissa, jnp_round_mantissa
+from repro.core.lutgen import get_lut
+from repro.core.multipliers import get_multiplier
+from repro.core.policy import NumericsPolicy
+from repro.kernels.approx_gemm import approx_gemm
+from repro.kernels.ref import ref_amsim_gemm, ref_direct_gemm, ref_im2col
+
+
+# =====================================================================
+# 2-D GEMM dispatch
+# =====================================================================
+
+def _gemm2d(a, b, policy: NumericsPolicy):
+    """(m, k) @ (k, n) -> (m, n) under the policy's numerics. f32 accumulate."""
+    mode = policy.mode
+    if mode == "native" or policy.is_native:
+        return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    mult = get_multiplier(policy.multiplier)
+    M = mult.mantissa_bits
+    if mode == "amsim":
+        lut = get_lut(mult)
+        return approx_gemm(a, b, lut, M)
+    if mode == "amsim_jnp":
+        lut = get_lut(mult)
+        return ref_amsim_gemm(a, b, jnp.asarray(lut), M)
+    if mode == "direct":
+        return ref_direct_gemm(a, b, mult)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _matmul_nograd(a, b, policy: NumericsPolicy):
+    """Batched matmul (..., m, k) @ broadcastable (..., k, n), no custom grad.
+
+    Three supported layouts (covering every call site in models/):
+      * b is 2-D (weight matmul): fold a's batch into m — single GEMM.
+      * equal batch dims (attention-style): flatten batch, map the GEMM.
+      * scalar/no batch: single GEMM.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if policy.is_native:
+        return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    if policy.mode == "surrogate":
+        # Truncation family: masking inputs + exact MXU product is
+        # per-multiply identical to the model up to final-product rounding.
+        # Elementwise quantize + native batched matmul — no layout
+        # restructuring, so GSPMD sharding propagates exactly as in
+        # native mode (no spurious all-gathers).
+        mult = get_multiplier(policy.multiplier)
+        M = mult.mantissa_bits
+        rnd = (jnp_round_mantissa if mult.name.startswith("bf16")
+               else jnp_truncate_mantissa)
+        return jnp.matmul(rnd(a, M), rnd(b, M),
+                          preferred_element_type=jnp.float32)
+    if a.ndim == 2 and b.ndim == 2:
+        return _gemm2d(a, b, policy)
+    if b.ndim == 2:
+        batch = a.shape[:-2]
+        m, k = a.shape[-2:]
+        out = _gemm2d(a.reshape(-1, k), b, policy)
+        return out.reshape(*batch, m, b.shape[-1])
+    if a.shape[:-2] == b.shape[:-2]:
+        batch = a.shape[:-2]
+        m, k = a.shape[-2:]
+        n = b.shape[-1]
+        af = a.reshape((-1, m, k))
+        bf = b.reshape((-1, k, n))
+        out = jax.lax.map(lambda ab: _gemm2d(ab[0], ab[1], policy), (af, bf))
+        return out.reshape(*batch, m, n)
+    # General broadcasting: broadcast batch dims then recurse.
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    a = jnp.broadcast_to(a, batch + a.shape[-2:])
+    b = jnp.broadcast_to(b, batch + b.shape[-2:])
+    return _matmul_nograd(a, b, policy)
+
+
+# =====================================================================
+# Differentiable matmul (paper: approx multiplies in fwd AND bwd)
+# =====================================================================
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def policy_matmul(a, b, policy: NumericsPolicy):
+    """Differentiable batched matmul under ``policy`` numerics."""
+    return _matmul_nograd(a, b, policy)
+
+
+def _mm_fwd(a, b, policy):
+    return _matmul_nograd(a, b, policy), (a, b)
+
+
+def _mm_bwd(policy, res, g):
+    a, b = res
+    bp = policy if policy.approx_backward else dataclasses.replace(policy, mode="native")
+    g = g.astype(jnp.float32)
+    swap = lambda x: jnp.swapaxes(x, -1, -2)
+    # dA = g @ B^T  — same batch layout as forward.
+    da = _matmul_nograd(g, swap(b), bp)
+    extra = da.ndim - a.ndim
+    if extra > 0:
+        da = da.sum(axis=tuple(range(extra)))
+    if b.ndim == 2:
+        # Weight gradient: fold every batch row into the contraction —
+        # dB = A_flat^T @ g_flat, one large GEMM (paper Fig. 8(b)).
+        k = a.shape[-1]
+        n = g.shape[-1]
+        db = _matmul_nograd(a.reshape(-1, k).T, g.reshape(-1, n), bp)
+    else:
+        db = _matmul_nograd(swap(a), g, bp)
+        # Sum over broadcasted batch dims of b.
+        extra = db.ndim - b.ndim
+        if extra > 0:
+            db = db.sum(axis=tuple(range(extra)))
+        for ax, (dbs, bs) in enumerate(zip(db.shape[:-2], b.shape[:-2])):
+            if bs == 1 and dbs != 1:
+                db = db.sum(axis=ax, keepdims=True)
+    return da.reshape(a.shape), db.reshape(b.shape)
+
+
+policy_matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+# =====================================================================
+# Einsum -> batched-matmul rewrite
+# =====================================================================
+
+def _parse_einsum(spec: str, a_shape, b_shape):
+    """Classify dims of a 2-operand einsum into (batch, contract, afree, bfree).
+
+    Supports specs with no repeated labels within an operand and no
+    lone-summed labels (every label appears in >= 2 of {a, b, out}).
+    """
+    lhs, out = spec.replace(" ", "").split("->")
+    sa, sb = lhs.split(",")
+    if len(set(sa)) != len(sa) or len(set(sb)) != len(sb):
+        raise ValueError(f"repeated labels unsupported: {spec}")
+    batch = [c for c in sa if c in sb and c in out]
+    contract = [c for c in sa if c in sb and c not in out]
+    afree = [c for c in sa if c not in sb]
+    bfree = [c for c in sb if c not in sa]
+    if not all(c in out for c in afree + bfree):
+        raise ValueError(f"lone-summed labels unsupported: {spec}")
+    dims = {}
+    for c, d in zip(sa, a_shape):
+        dims[c] = d
+    for c, d in zip(sb, b_shape):
+        if c in dims and dims[c] != d and 1 not in (dims[c], d):
+            raise ValueError(f"dim mismatch for {c!r} in {spec}")
+        dims[c] = max(dims.get(c, d), d)
+    return sa, sb, out, batch, contract, afree, bfree, dims
+
+
+def policy_einsum(spec: str, a, b, policy: NumericsPolicy):
+    """2-operand einsum routed through policy numerics (differentiable)."""
+    if policy.is_native:
+        return jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+    sa, sb, out, batch, contract, afree, bfree, dims = _parse_einsum(
+        spec, a.shape, b.shape)
+    # a -> (batch..., afree.., contract..), b -> (batch..., contract.., bfree..)
+    aperm = [sa.index(c) for c in batch + afree + contract]
+    bperm = [sb.index(c) for c in batch + contract + bfree]
+    at = jnp.transpose(a, aperm)
+    bt = jnp.transpose(b, bperm)
+    bshape = [dims[c] for c in batch]
+    at = jnp.broadcast_to(at, bshape + list(at.shape[len(batch):]))
+    bt = jnp.broadcast_to(bt, bshape + list(bt.shape[len(batch):]))
+    m = int(np.prod([dims[c] for c in afree], initial=1))
+    k = int(np.prod([dims[c] for c in contract], initial=1))
+    n = int(np.prod([dims[c] for c in bfree], initial=1))
+    at = at.reshape(bshape + [m, k])
+    bt = bt.reshape(bshape + [k, n])
+    o = policy_matmul(at, bt, policy)
+    o = o.reshape(bshape + [dims[c] for c in afree] + [dims[c] for c in bfree])
+    # current order: batch + afree + bfree -> out order
+    cur = batch + afree + bfree
+    operm = [cur.index(c) for c in out]
+    return jnp.transpose(o, operm)
+
+
+# =====================================================================
+# Conv2D (paper §VI-B: IM2COL + GEMM, fwd + both bwd gradients)
+# =====================================================================
+
+def _conv_pads(h, w, kh, kw, stride, padding):
+    if padding == "VALID":
+        return (0, 0, 0, 0)
+    oh = -(-h // stride)
+    ow = -(-w // stride)
+    ph = max((oh - 1) * stride + kh - h, 0)
+    pw = max((ow - 1) * stride + kw - w, 0)
+    return (ph // 2, ph - ph // 2, pw // 2, pw - pw // 2)
+
+
+def _conv_fwd_impl(x, w, stride, padding, policy):
+    """x (N,H,W,C), w (KH,KW,C,O) -> (N,OH,OW,O) via im2col+GEMM."""
+    n, h, wid, c = x.shape
+    kh, kw, _, o = w.shape
+    pad = _conv_pads(h, wid, kh, kw, stride, padding)
+    cols = ref_im2col(x, kh, kw, stride, pad)      # (N*OH*OW, KH*KW*C)
+    out = policy_matmul(cols, w.reshape(-1, o), policy)
+    oh = (h + pad[0] + pad[1] - kh) // stride + 1
+    ow = (wid + pad[2] + pad[3] - kw) // stride + 1
+    return out.reshape(n, oh, ow, o)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def approx_conv2d(x, w, stride: int, padding: str, policy: NumericsPolicy):
+    """Differentiable NHWC conv2d with approximate multiplications.
+
+    Forward and both backward GEMMs (weight gradient & preceding-layer
+    gradient, paper Fig. 8 b/c) run under ``policy`` numerics; the paper's
+    dilation/padding restructuring maps to index arithmetic here.
+    """
+    return _conv_fwd_impl(x, w, stride, padding, policy)
+
+
+def _conv_fwd(x, w, stride, padding, policy):
+    return _conv_fwd_impl(x, w, stride, padding, policy), (x, w)
+
+
+def _conv_bwd(stride, padding, policy, res, g):
+    x, w = res
+    bp = policy if policy.approx_backward else dataclasses.replace(policy, mode="native")
+    n, h, wid, c = x.shape
+    kh, kw, _, o = w.shape
+    pad = _conv_pads(h, wid, kh, kw, stride, padding)
+    _, oh, ow, _ = g.shape
+    g2 = g.reshape(n * oh * ow, o).astype(jnp.float32)
+
+    # --- weight gradient (Fig. 8b): cols(x)^T @ g.  The paper's fused
+    # dilation corresponds to the strided im2col indexing inside ref_im2col.
+    cols = ref_im2col(x, kh, kw, stride, pad)        # (N*OH*OW, KH*KW*C)
+    dw = policy_matmul(cols.T, g2, bp).reshape(kh, kw, c, o)
+
+    # --- preceding-layer gradient (Fig. 8c): full correlation of the
+    # dilated+padded error with the reversed-transposed weights.
+    if stride > 1:  # materialise dilation (paper fuses it; index-equivalent)
+        gd = jnp.zeros((n, (oh - 1) * stride + 1, (ow - 1) * stride + 1, o),
+                       g.dtype).at[:, ::stride, ::stride, :].set(g)
+    else:
+        gd = g
+    # pad so that VALID conv with the flipped kernel returns H x W
+    pt = kh - 1 - pad[0]
+    pl_ = kw - 1 - pad[2]
+    gh = gd.shape[1]
+    gw = gd.shape[2]
+    pb = h - (gh + pt - kh + 1)
+    pr = wid - (gw + pl_ - kw + 1)
+    gcols = ref_im2col(gd, kh, kw, 1, (pt, pb, pl_, pr))  # (N*H*W, KH*KW*O)
+    wrev = w[::-1, ::-1, :, :]                             # reverse
+    wrt = jnp.transpose(wrev, (0, 1, 3, 2)).reshape(-1, c)  # transpose O<->C
+    dx = policy_matmul(gcols, wrt, bp).reshape(n, h, wid, c)
+    return dx, dw
+
+
+approx_conv2d.defvjp(_conv_fwd, _conv_bwd)

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels are asserted against
+(tests sweep shapes/dtypes and assert_allclose).  They are also usable
+execution modes in their own right (``amsim_jnp`` / ``direct`` in
+NumericsPolicy) — portable to any backend, no Pallas required.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amsim import amsim_multiply
+from repro.core.multipliers import Multiplier
+
+# Contraction-chunk size for elementwise-simulated GEMMs: bounds the
+# (m, chunk, n) intermediate to keep the oracle runnable at LeNet scale.
+_K_CHUNK = 128
+
+
+def ref_amsim_gemm(a, b, lut, M: int):
+    """LUT-simulated GEMM oracle: out[i,j] = sum_k amsim(a[i,k], b[k,j]).
+
+    Accumulation in FP32 (paper §VII).  a: (m, k) f32, b: (k, n) f32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    lut = jnp.asarray(lut, jnp.uint32)
+
+    def chunk(carry, idx):
+        acc = carry
+        ac = jax.lax.dynamic_slice(a, (0, idx), (m, _K_CHUNK))
+        bc = jax.lax.dynamic_slice(b, (idx, 0), (_K_CHUNK, n))
+        prod = amsim_multiply(ac[:, :, None], bc[None, :, :], lut, M)
+        return acc + jnp.sum(prod, axis=1, dtype=jnp.float32), None
+
+    if k % _K_CHUNK == 0 and k > _K_CHUNK:
+        acc = jnp.zeros((m, n), jnp.float32)
+        acc, _ = jax.lax.scan(
+            chunk, acc, jnp.arange(0, k, _K_CHUNK, dtype=jnp.int32)
+        )
+        return acc
+    prod = amsim_multiply(a[:, :, None], b[None, :, :], lut, M)
+    return jnp.sum(prod, axis=1, dtype=jnp.float32)
+
+
+def ref_direct_gemm(a, b, multiplier: Multiplier):
+    """Direct bit-manipulation GEMM oracle (the paper's 'direct C sim')."""
+    m, k = a.shape
+    _, n = b.shape
+
+    def chunk(acc, idx):
+        ac = jax.lax.dynamic_slice(a, (0, idx), (m, _K_CHUNK))
+        bc = jax.lax.dynamic_slice(b, (idx, 0), (_K_CHUNK, n))
+        prod = multiplier.jnp_mul(ac[:, :, None], bc[None, :, :])
+        return acc + jnp.sum(prod, axis=1, dtype=jnp.float32), None
+
+    if k % _K_CHUNK == 0 and k > _K_CHUNK:
+        acc = jnp.zeros((m, n), jnp.float32)
+        acc, _ = jax.lax.scan(
+            chunk, acc, jnp.arange(0, k, _K_CHUNK, dtype=jnp.int32)
+        )
+        return acc
+    prod = multiplier.jnp_mul(a[:, :, None], b[None, :, :])
+    return jnp.sum(prod, axis=1, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------- conv oracle
+def ref_conv2d(x, w, stride: int = 1, padding: str = "SAME"):
+    """Exact NHWC conv oracle via lax.conv_general_dilated (f32 accum)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ref_im2col(x, kh: int, kw: int, stride: int, pad: tuple[int, int, int, int]):
+    """Reference im2col: x (N,H,W,C) -> (N*OH*OW, KH*KW*C) patch matrix."""
+    n, h, w, c = x.shape
+    pt, pb, pl_, pr = pad
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    oh = (h + pt + pb - kh) // stride + 1
+    ow = (w + pl_ + pr - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp,
+                (0, i, j, 0),
+                (n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(patch.reshape(n * oh * ow, c))
+    # (N*OH*OW, KH*KW, C) -> (N*OH*OW, KH*KW*C)
+    return jnp.stack(cols, axis=1).reshape(n * oh * ow, kh * kw * c)

@@ -1,0 +1,104 @@
+"""Distributed training driver.
+
+Runs a *real* (reduced or full) training job on whatever devices exist:
+the production mesh when 256+ devices are available, else a debug mesh.
+The same cell builders as the dry-run wire shardings, so this driver is
+the dry-run made executable.
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+      --reduced --steps 20 --batch 8 --seq 128 --numerics amsim_jnp \
+      --multiplier afm16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import SHAPES, get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.core.policy import NumericsPolicy
+from repro.data.pipeline import lm_batch
+from repro.distributed.sharding import lm_param_pspecs, opt_state_pspecs
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import encdec as encdec_mod
+from repro.models.transformer import init_lm, lm_loss
+from repro.optim.optimizers import cosine_schedule, make_optimizer
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig, TrainerState
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--numerics", default="native")
+    ap.add_argument("--multiplier", default="fp32")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    policy = (NumericsPolicy() if args.numerics == "native" else
+              NumericsPolicy(mode=args.numerics, multiplier=args.multiplier))
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    ndev = len(jax.devices())
+    if ndev >= 256:
+        mesh = make_production_mesh()
+    elif ndev >= 4:
+        mesh = make_debug_mesh(2, 2)
+    else:
+        mesh = None
+
+    key = jax.random.PRNGKey(args.seed)
+    if cfg.family == "encdec":
+        params = encdec_mod.init_encdec(key, cfg)
+        loss_fn = lambda p, b: encdec_mod.encdec_loss(p, b, cfg, policy)
+    else:
+        params = init_lm(key, cfg)
+        loss_fn = lambda p, b: lm_loss(p, b, cfg, policy)
+
+    opt = make_optimizer(cfg.optimizer, cosine_schedule(args.lr, 10, args.steps))
+    opt_state = opt.init(params)
+    step_fn = make_train_step(loss_fn, opt, microbatches=args.microbatches)
+
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        pspecs = lm_param_pspecs(params, cfg, mesh)
+        ospecs = opt_state_pspecs(cfg.optimizer, pspecs)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                           is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval") or type(x).__name__ == "PartitionSpec")
+        osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                           is_leaf=lambda x: type(x).__name__ == "PartitionSpec")
+        params = jax.device_put(params, psh)
+        opt_state = jax.device_put(opt_state, osh)
+        with mesh:
+            step_fn = jax.jit(step_fn)
+            run_train(step_fn, cfg, shape, params, opt_state, args)
+    else:
+        step_fn = jax.jit(step_fn)
+        run_train(step_fn, cfg, shape, params, opt_state, args)
+
+
+def run_train(step_fn, cfg, shape, params, opt_state, args):
+    batch_fn = lambda s: lm_batch(cfg, shape, s)
+    trainer = Trainer(step_fn, batch_fn, TrainerConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(args.steps // 5, 1), log_every=max(args.steps // 10, 1)))
+    state = trainer.run(TrainerState(params, opt_state))
+    print(f"done at step {state.step}; stragglers flagged: "
+          f"{len(state.stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

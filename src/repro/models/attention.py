@@ -1,0 +1,190 @@
+"""GQA attention with RoPE, KV cache, sliding window, cross-attention.
+
+Score and value matmuls route through ``policy.einsum`` (the paper's
+observation that MultiHeadAttention "involves matrix multiplication under
+the hood" — Table I); QKV/O projections route through ``policy.matmul``.
+The grouped-query einsum keeps the KV-head axis as a batch axis so KV is
+never materialised at full head count.
+
+Long sequences are processed in q-chunks (scan) so the score matrix never
+exceeds (B, KV, G, q_chunk, T) — the memory-side requirement for the
+32k-prefill dry-run cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import NumericsPolicy
+from repro.models.layers import init_linear, linear
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig):
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * dh, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.n_heads * dh, d),
+    }
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (B, S, H, dh), positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _wsc(x, *spec):
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
+                     causal: bool, window: int, daxes):
+    """§Perf optimisation: repeat KV to full head count and shard the head
+    axis over "model" with explicit constraints — keeps score/prob tensors
+    sharded 1/TP instead of replicated (GSPMD often fails to propagate
+    sharding through the grouped-query reshape)."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    q = _wsc(q, daxes, None, "model", None)
+    k = _wsc(k, daxes, None, "model", None)
+    v = _wsc(v, daxes, None, "model", None)
+    ap = policy.for_attention()
+    scores = ap.einsum("bqhd,bthd->bhqt", q, k) / jnp.sqrt(float(dh))
+    scores = _wsc(scores, daxes, "model", None, None)
+    mask = (k_pos >= 0)[None, :] & jnp.ones((S, 1), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    probs = jax.nn.softmax(
+        jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF), -1)
+    out = ap.einsum("bhqt,bthd->bqhd", probs, v)
+    return _wsc(out, daxes, None, "model", None)
+
+
+def _attend(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
+            causal: bool, window: int):
+    """q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H,dh). Grouped-query einsum.
+
+    k_pos holds the *absolute* position of every KV slot; negative means
+    unwritten (ring-buffer cache) and is masked out.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, dh)
+    ap = policy.for_attention()
+    scores = ap.einsum("bqkgd,btkd->bkgqt", qg, k) / jnp.sqrt(float(dh))
+    mask = (k_pos >= 0)[None, :] & jnp.ones((S, 1), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = ap.einsum("bkgqt,btkd->bqkgd", probs, v)
+    return out.reshape(B, S, H, dh)
+
+
+def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
+              kv_src=None, causal=True, q_offset=0, cache=None,
+              window: int = 0, q_chunk: int | None = None,
+              use_rope: bool = True):
+    """Full attention block.  Returns (out, new_cache).
+
+    kv_src: encoder states for cross-attention (no rope, no cache update
+            semantics beyond plain K/V projection, causal=False expected).
+    cache:  {"k","v": (B, Tmax, KV, dh), "len": int32} for decode.
+    """
+    B, S, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x, policy).reshape(B, S, H, dh)
+    src = x if kv_src is None else kv_src
+    Tsrc = src.shape[1]
+    k = linear(p["wk"], src, policy).reshape(B, Tsrc, KV, dh)
+    v = linear(p["wv"], src, policy).reshape(B, Tsrc, KV, dh)
+
+    start = cache["len"] if cache is not None else q_offset
+    q_pos = start + jnp.arange(S, dtype=jnp.int32)
+    if use_rope and kv_src is None:
+        q = rope(q, q_pos, cfg.rope_theta)
+        k = rope(k, q_pos, cfg.rope_theta)  # fresh K written at the same offsets
+
+    if cache is not None:
+        # Ring-buffer cache: write the S new KVs at slot len % Tmax and
+        # record their absolute positions (sliding-window decode keeps a
+        # cache of only `window` slots; masking is position-based).
+        Tmax = cache["k"].shape[1]
+        slot = cache["len"] % Tmax  # assumes the S-token write fits w/o wrap
+        cdt = cache["k"].dtype
+        k = jax.lax.dynamic_update_slice(cache["k"], k.astype(cdt),
+                                         (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v.astype(cdt),
+                                         (0, slot, 0, 0))
+        pos = jax.lax.dynamic_update_slice(cache["pos"], q_pos, (slot,))
+        cache = {"k": k, "v": v, "pos": pos, "len": cache["len"] + S}
+        k_pos = pos
+    else:
+        k_pos = jnp.arange(Tsrc, dtype=jnp.int32) if kv_src is not None else q_pos
+
+    if cfg.shard_attn_heads:
+        attend = lambda qi, pi: _attend_fullhead(
+            qi, k, v, pi, k_pos, policy, causal=causal, window=window,
+            daxes=(cfg.mesh_data_axes if len(cfg.mesh_data_axes) > 1
+                   else cfg.mesh_data_axes[0]))
+    else:
+        attend = lambda qi, pi: _attend(qi, k, v, pi, k_pos, policy,
+                                        causal=causal, window=window)
+
+    q_chunk = cfg.q_chunk if q_chunk is None else q_chunk
+    if S > q_chunk and S % q_chunk == 0:
+        nc = S // q_chunk
+        if cfg.unroll_attn_chunks:
+            # Python-unrolled chunks: used by the dry-run so cost_analysis
+            # counts every chunk's score FLOPs (lax.map bodies cost once).
+            outs = [
+                attend(q[:, i * q_chunk:(i + 1) * q_chunk],
+                       q_pos[i * q_chunk:(i + 1) * q_chunk])
+                for i in range(nc)
+            ]
+            out = jnp.concatenate(outs, axis=1)
+        else:
+            qc = q.reshape(B, nc, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+            pc = q_pos.reshape(nc, q_chunk)
+            out = jax.lax.map(lambda args: attend(*args), (qc, pc))
+            out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    else:
+        out = attend(q, q_pos)
+    return linear(p["wo"], out.reshape(B, S, H * dh), policy), cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    dh, KV = cfg.head_dim, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.cache_dtype)
+    return {
+        "k": jnp.zeros((batch, max_len, KV, dh), dt),
+        "v": jnp.zeros((batch, max_len, KV, dh), dt),
+        "pos": jnp.full((max_len,), -(2**30), jnp.int32),  # -ve = unwritten
+        "len": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,119 @@
+"""Whisper-style encoder-decoder transformer.
+
+Conv audio frontend is a STUB (per assignment): the encoder consumes
+precomputed frame embeddings (B, F, d_model).  Encoder: bidirectional
+self-attention.  Decoder: causal self-attention + cross-attention into
+the encoder output.  All GEMMs policy-routed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import NumericsPolicy
+from repro.models.attention import attention, init_attention, init_cache
+from repro.models.layers import (
+    embed, init_embedding, init_linear, init_rmsnorm, linear, rmsnorm, unembed,
+)
+from repro.models.mlp import ffn, init_ffn
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"attn": init_attention(ks[0], cfg),
+            "ffn": init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.act),
+            "n1": init_rmsnorm(cfg.d_model), "n2": init_rmsnorm(cfg.d_model)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"self": init_attention(ks[0], cfg),
+            "cross": init_attention(ks[1], cfg),
+            "ffn": init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.act),
+            "n1": init_rmsnorm(cfg.d_model), "n2": init_rmsnorm(cfg.d_model),
+            "n3": init_rmsnorm(cfg.d_model)}
+
+
+def init_encdec(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    ek = jax.random.split(ks[0], cfg.n_enc_layers)
+    dk = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": init_embedding(ks[2], cfg.vocab, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(ek),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dk),
+        "enc_norm": init_rmsnorm(cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "head": init_linear(ks[3], cfg.d_model, cfg.vocab),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig, policy: NumericsPolicy,
+           train: bool = False):
+    """frames (B, F, d) precomputed embeddings -> encoder states."""
+    def block(lp, x):
+        a, _ = attention(lp["attn"], rmsnorm(lp["n1"], x, cfg.norm_eps),
+                         cfg, policy, causal=False)
+        x = x + a
+        return x + ffn(lp["ffn"], rmsnorm(lp["n2"], x, cfg.norm_eps),
+                       policy, cfg.act)
+    if train and cfg.remat:
+        block = jax.checkpoint(block)
+    x, _ = jax.lax.scan(lambda x, lp: (block(lp, x), None),
+                        frames.astype(jnp.float32), params["enc_layers"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode(params, tokens, enc_out, cfg: ArchConfig, policy: NumericsPolicy,
+           caches=None, train: bool = False):
+    """tokens (B, S) -> logits.  caches: stacked self-attn caches (decode)."""
+    x = embed(params["embed"], tokens)
+
+    def block(lp, x, cache):
+        a, cache = attention(lp["self"], rmsnorm(lp["n1"], x, cfg.norm_eps),
+                             cfg, policy, cache=cache)
+        x = x + a
+        c, _ = attention(lp["cross"], rmsnorm(lp["n2"], x, cfg.norm_eps),
+                         cfg, policy, kv_src=enc_out, causal=False,
+                         use_rope=False)
+        x = x + c
+        return x + ffn(lp["ffn"], rmsnorm(lp["n3"], x, cfg.norm_eps),
+                       policy, cfg.act), cache
+
+    if train and cfg.remat:
+        block = jax.checkpoint(block)
+    xs = (params["dec_layers"],) + ((caches,) if caches is not None else ())
+
+    def scan_fn(x, xs_t):
+        lp = xs_t[0]
+        cache = xs_t[1] if len(xs) > 1 else None
+        x, cache = block(lp, x, cache)
+        return x, cache
+
+    x, new_caches = jax.lax.scan(scan_fn, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = linear(params["head"], x, policy)
+    return logits, (new_caches if caches is not None else None)
+
+
+def encdec_loss(params, batch, cfg: ArchConfig, policy: NumericsPolicy):
+    """batch: {"embeds": (B,F,d) frames, "tokens", "labels": (B,S)}."""
+    enc = encode(params, batch["embeds"], cfg, policy, train=True)
+    logits, _ = decode(params, batch["tokens"], enc, cfg, policy, train=True)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    # mask-and-sum label gather (scatter-free backward; see lm_loss)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    ll = jnp.sum(jnp.where(iota == jnp.maximum(labels, 0)[..., None],
+                           logits.astype(jnp.float32), 0.0), axis=-1)
+    xent = jnp.where(valid, lse - ll, 0.0)
+    loss = jnp.sum(xent) / jnp.maximum(jnp.sum(valid), 1)
+    return loss, {"xent": loss}
+
+
+def init_encdec_caches(cfg: ArchConfig, batch: int, max_len: int):
+    mk = lambda: init_cache(cfg, batch, max_len)
+    return jax.tree.map(lambda *a: jnp.stack(a),
+                        *[mk() for _ in range(cfg.n_layers)])

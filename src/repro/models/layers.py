@@ -1,0 +1,64 @@
+"""Primitive layers, every multiplication routed through NumericsPolicy.
+
+Functional style: ``init_*`` builds a param pytree (dict of jnp arrays),
+the apply function takes (params, inputs, ..., policy).  This is the
+AMDENSE analogue (paper §VI-C) generalised to the whole model zoo.
+
+Elementwise products (norm scales, activations) stay native: the paper's
+AMDENSE/AMCONV2D replace *GEMM* multiplies; norm/act multiplies are a
+vanishing fraction of FLOPs and are not in the paper's scope.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import NumericsPolicy
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False, scale=None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p, x, policy: NumericsPolicy):
+    y = policy.matmul(x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_embedding(key, vocab: int, d: int):
+    return {"emb": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p, ids):
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+def unembed(p, x, policy: NumericsPolicy):
+    """Tied LM head: x @ emb^T (a GEMM -> routed through the policy)."""
+    return policy.matmul(x, p["emb"].T)
+
+
+def init_rmsnorm(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)) * p["g"]
+
+
+def init_layernorm(d: int):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]

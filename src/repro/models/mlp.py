@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU and GELU, policy-routed GEMMs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import NumericsPolicy
+from repro.models.layers import init_linear, linear
+
+
+def init_ffn(key, d: int, d_ff: int, act: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "wg": init_linear(ks[0], d, d_ff),
+            "wu": init_linear(ks[1], d, d_ff),
+            "wd": init_linear(ks[2], d_ff, d),
+        }
+    return {
+        "wu": init_linear(ks[0], d, d_ff),
+        "wd": init_linear(ks[1], d_ff, d),
+    }
+
+
+def ffn(p, x, policy: NumericsPolicy, act: str = "swiglu"):
+    if act == "swiglu":
+        return linear(
+            p["wd"],
+            jax.nn.silu(linear(p["wg"], x, policy)) * linear(p["wu"], x, policy),
+            policy,
+        )
+    return linear(p["wd"], jax.nn.gelu(linear(p["wu"], x, policy)), policy)

@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based static dispatch.
+
+Index-based dispatch (scatter to per-expert slot buffers) rather than the
+one-hot einsum of Switch-Transformer: memory is O(assignments x d), not
+O(tokens x experts x capacity).  The (E, C, d) buffers shard over the
+"model" axis on E (expert parallelism) and the token axis of the router
+over "data"; expert GEMMs are policy-routed batched matmuls, so the
+paper's approximate numerics apply inside every expert.
+
+Tokens overflowing an expert's capacity are dropped (scatter mode=drop),
+standard capacity-factor semantics.  An auxiliary load-balance loss
+(Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import NumericsPolicy
+from repro.models.layers import init_linear
+from repro.models.mlp import ffn, init_ffn
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def init_moe(key, cfg: ArchConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 3 + m.n_shared_experts)
+    ek = jax.random.split(ks[1], m.n_experts)
+    experts = jax.vmap(lambda k: init_ffn(k, d, m.d_ff, cfg.act))(ek)
+    p = {"router": init_linear(ks[0], d, m.n_experts), "experts": experts}
+    if m.n_shared_experts:
+        p["shared"] = init_ffn(ks[2], d, m.d_ff * m.n_shared_experts, cfg.act)
+    return p
+
+
+def moe_ffn(p, x, cfg: ArchConfig, policy: NumericsPolicy):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    C = _round_up(max(int(T * k * m.capacity_factor / E), 1), 8)
+    xf = x.reshape(T, d)
+
+    logits = policy.matmul(xf, p["router"]["w"])          # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, sel = jax.lax.top_k(probs, k)                   # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # slot assignment: rank of each (token, choice) within its expert.
+    # associative_scan (log-depth) instead of cumsum: XLA-CPU lowers
+    # cumsum to reduce-window and cost-models it O(n^2), poisoning the
+    # roofline; the scan form is also how TPU lowers large prefix sums.
+    e_flat = sel.reshape(-1)                              # (T*k,) token-major
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)   # (T*k, E)
+    pos = jax.lax.associative_scan(jnp.add, onehot, axis=0) - onehot
+    slot = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    buf = jnp.zeros((E, C, d), xf.dtype).at[e_flat, slot].set(
+        xf[tok], mode="drop")                             # (E, C, d)
+
+    out = ffn(p["experts"], buf, policy, cfg.act)         # batched over E
+
+    got = out.at[e_flat, jnp.minimum(slot, C - 1)].get()  # (T*k, d)
+    got = jnp.where((slot < C)[:, None], got, 0.0)
+    y = jnp.zeros((T, d), jnp.float32).at[tok].add(
+        got * gate.reshape(-1)[:, None])
+
+    if m.n_shared_experts and "shared" in p:
+        y = y + ffn(p["shared"], xf, policy, cfg.act)
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(sel, E, dtype=jnp.float32).sum(1), axis=0)  # f_e
+    router_frac = jnp.mean(probs, axis=0)                          # P_e
+    aux = E * jnp.sum(assign_frac * router_frac) / k
+    return y.reshape(B, S, d), aux

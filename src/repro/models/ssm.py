@@ -1,0 +1,166 @@
+"""Mamba2 (SSD — state-space duality) block, policy-routed einsums.
+
+Chunked SSD algorithm (arXiv:2405.21060): within a chunk of length Q the
+output is an attention-like masked matmul (quadratic in Q only); across
+chunks a (heads, p, N) state is carried by a linear recurrence.  Both the
+intra-chunk score/value matmuls and the state contraction/expansion
+einsums route through ``policy.einsum`` — the SSD form makes the paper's
+approximate-GEMM technique directly applicable to an attention-free arch.
+
+Decode is a constant-size recurrent state update: the "KV cache" of an
+SSM is O(1) in sequence length (noted in the roofline table for the
+decode_32k / long_500k cells).
+
+n_groups=1 (Mamba2 default): B and C are shared across heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import NumericsPolicy
+from repro.models.layers import init_linear, init_rmsnorm, linear, rmsnorm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nheads, conv_ch
+
+
+def init_mamba2(key, cfg: ArchConfig):
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * s.n_groups * s.d_state + nheads  # z,x,B,C,dt
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, d_proj),
+        "conv_w": jax.random.normal(ks[1], (s.conv_kernel, conv_ch), jnp.float32)
+        * (1.0 / s.conv_kernel) ** 0.5,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.full((nheads,), -2.0, jnp.float32),
+        "norm": init_rmsnorm(d_in),
+        "out_proj": init_linear(ks[2], d_in, cfg.d_model),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x (B, L, ch), w (K, ch)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return y + b
+
+
+def _split_proj(cfg, zxbcdt):
+    s, d_in, nheads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, xs, Bc, Cc, dt
+
+
+def mamba2(p, u, cfg: ArchConfig, policy: NumericsPolicy, *, cache=None):
+    """u (B, L, d) -> (y (B, L, d), new_cache).
+
+    cache: {"ssm": (B, nh, p, N), "conv": (B, K-1, conv_ch)} for decode.
+    """
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    B_, L, _ = u.shape
+    hp, N, Q = s.head_dim, s.d_state, s.chunk
+
+    zxbcdt = linear(p["in_proj"], u, policy)
+    z, xs, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+
+    if cache is not None:
+        # decode: prepend conv state, run conv over the (K-1+L) window
+        full = jnp.concatenate([cache["conv"], xbc], axis=1)
+        K = s.conv_kernel
+        y = sum(full[:, i : i + L, :] * p["conv_w"][i] for i in range(K))
+        xbc = y + p["conv_b"]
+        new_conv = full[:, -(K - 1) :, :]
+    else:
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        new_conv = None
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(B_, L, nheads, hp)
+    Bc = xbc[..., d_in : d_in + N]                      # (B, L, N)  G=1
+    Cc = xbc[..., d_in + N :]                           # (B, L, N)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])             # (B, L, nh)
+    A = -jnp.exp(p["A_log"])                            # (nh,)
+    dA = dt * A                                         # (B, L, nh)  log-decay
+    xdt = xs * dt[..., None]                            # (B, L, nh, p)
+
+    if cache is not None:
+        # recurrent step(s): state <- state*exp(dA) + B (x*dt);  y = C.state
+        def step(state, t):
+            st = state * jnp.exp(dA[:, t])[:, :, None, None]
+            st = st + jnp.einsum("bn,bhp->bhpn", Bc[:, t], xdt[:, t])
+            y = jnp.einsum("bn,bhpn->bhp", Cc[:, t], st)
+            return st, y
+
+        state, ys = jax.lax.scan(step, cache["ssm"], jnp.arange(L))
+        y = jnp.moveaxis(ys, 0, 1)                      # (B, L, nh, p)
+        new_cache = {"ssm": state, "conv": new_conv}
+    else:
+        y = _ssd_chunked(xdt, Bc, Cc, dA, Q, policy)
+        new_cache = None
+
+    y = y + p["D"][None, None, :, None] * xs            # skip connection
+    y = y.reshape(B_, L, d_in) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return linear(p["out_proj"], y, policy), new_cache
+
+
+def _ssd_chunked(xdt, Bc, Cc, dA, Q: int, policy: NumericsPolicy):
+    """SSD scan. xdt (B,L,nh,p), Bc/Cc (B,L,N), dA (B,L,nh) -> (B,L,nh,p)."""
+    B_, L, nh, hp = xdt.shape
+    N = Bc.shape[-1]
+    assert L % Q == 0, (L, Q)
+    c = L // Q
+    xc = xdt.reshape(B_, c, Q, nh, hp)
+    Bcc = Bc.reshape(B_, c, Q, N)
+    Ccc = Cc.reshape(B_, c, Q, N)
+    dAc = dA.reshape(B_, c, Q, nh)
+    cum = jnp.cumsum(dAc, axis=2)                       # (B,c,Q,nh)
+
+    # --- intra-chunk: attention-like masked matmul
+    scores = policy.einsum("bcln,bcsn->bcls", Ccc, Bcc)  # (B,c,Q,Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # l,s -> (B,c,Q,Q,nh)
+    li = jnp.arange(Q)
+    mask = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    Tm = jnp.where(mask, jnp.exp(decay), 0.0) * scores[..., None]  # (B,c,Q,Q,nh)
+    y_intra = policy.einsum("bclsh,bcshp->bclhp", Tm, xc)
+
+    # --- chunk states: S_c = sum_s exp(cum_last - cum_s) B_s x_s^T
+    to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,c,Q,nh)
+    Sc = policy.einsum("bcsn,bcshp->bchpn", Bcc, xc * to_end[..., None])
+
+    # --- inter-chunk recurrence over c (sequential scan)
+    seg = jnp.exp(cum[:, :, -1, :])                     # (B,c,nh) chunk decay
+
+    def step(h, t):
+        y = h                                           # state entering chunk t
+        h = h * seg[:, t][:, :, None, None] + Sc[:, t]
+        return h, y
+
+    h0 = jnp.zeros((B_, nh, hp, N), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, jnp.arange(c))
+    hs = jnp.moveaxis(hs, 0, 1)                         # (B,c,nh,hp,N) entering
+    y_inter = policy.einsum("bcln,bchpn->bclhp", Ccc, hs)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    return (y_intra + y_inter).reshape(B_, L, nh, hp)
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int):
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nheads, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_ch), jnp.float32),
+    }

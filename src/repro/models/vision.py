@@ -1,0 +1,118 @@
+"""The paper's own evaluation models (§VII): LeNet-300-100, LeNet-5, ResNet.
+
+These use approx_conv2d (the AMCONV2D analogue) and policy-routed dense
+layers (AMDENSE), and are trained for real on CPU to reproduce the
+training-convergence experiments (Fig. 10, Tables III/IV, Fig. 11).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import VisionConfig
+from repro.core.policy import NumericsPolicy
+from repro.kernels.ops import approx_conv2d
+from repro.models.layers import init_linear, linear
+
+
+def _init_conv(key, kh, kw, cin, cout):
+    scale = (1.0 / (kh * kw * cin)) ** 0.5
+    return {"w": jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * scale,
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv(p, x, policy, stride=1, padding="SAME"):
+    return approx_conv2d(x, p["w"], stride, padding, policy) + p["b"]
+
+
+def _avgpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, k, k, 1), (1, k, k, 1), "VALID") / (k * k)
+
+
+# ------------------------------------------------------------------ MLP
+def init_vision(key, cfg: VisionConfig):
+    if cfg.kind == "mlp":
+        dims = [cfg.input_hw * cfg.input_hw * cfg.input_ch, *cfg.hidden,
+                cfg.n_classes]
+        ks = jax.random.split(key, len(dims) - 1)
+        return {"dense": [init_linear(k, i, o, bias=True)
+                          for k, i, o in zip(ks, dims[:-1], dims[1:])]}
+    if cfg.kind == "cnn":
+        ks = jax.random.split(key, 8)
+        convs, cin = [], cfg.input_ch
+        for i, ch in enumerate(cfg.channels):
+            convs.append(_init_conv(ks[i], 5, 5, cin, ch))
+            cin = ch
+        hw = cfg.input_hw // (2 ** len(cfg.channels))
+        dims = [hw * hw * cin, *cfg.hidden, cfg.n_classes]
+        dense = [init_linear(k, i, o, bias=True) for k, i, o in
+                 zip(ks[4:], dims[:-1], dims[1:])]
+        return {"convs": convs, "dense": dense}
+    if cfg.kind == "resnet":
+        ks = iter(jax.random.split(key, 64))
+        p = {"stem": _init_conv(next(ks), 3, 3, cfg.input_ch, cfg.channels[0])}
+        stages = []
+        cin = cfg.channels[0]
+        for ch in cfg.channels:
+            blocks = []
+            for b in range(cfg.blocks_per_stage):
+                blk = {"c1": _init_conv(next(ks), 3, 3, cin, ch),
+                       "c2": _init_conv(next(ks), 3, 3, ch, ch)}
+                if cin != ch:
+                    blk["proj"] = _init_conv(next(ks), 1, 1, cin, ch)
+                blocks.append(blk)
+                cin = ch
+            stages.append(blocks)
+        p["stages"] = stages
+        p["head"] = init_linear(next(ks), cin, cfg.n_classes, bias=True)
+        return p
+    raise ValueError(cfg.kind)
+
+
+def vision_forward(params, x, cfg: VisionConfig, policy: NumericsPolicy):
+    """x (B, H, W, C) f32 in [0,1] -> logits (B, n_classes)."""
+    if cfg.kind == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        for i, lp in enumerate(params["dense"]):
+            h = linear(lp, h, policy)
+            if i < len(params["dense"]) - 1:
+                h = jax.nn.relu(h)
+        return h
+    if cfg.kind == "cnn":
+        h = x
+        for cp in params["convs"]:
+            h = jax.nn.relu(_conv(cp, h, policy))
+            h = _avgpool(h)
+        h = h.reshape(h.shape[0], -1)
+        for i, lp in enumerate(params["dense"]):
+            h = linear(lp, h, policy)
+            if i < len(params["dense"]) - 1:
+                h = jax.nn.relu(h)
+        return h
+    if cfg.kind == "resnet":
+        h = jax.nn.relu(_conv(params["stem"], x, policy))
+        for si, blocks in enumerate(params["stages"]):
+            for bi, blk in enumerate(blocks):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                r = jax.nn.relu(_conv(blk["c1"], h, policy, stride=stride))
+                r = _conv(blk["c2"], r, policy)
+                sc = h
+                if "proj" in blk:
+                    sc = _conv(blk["proj"], h, policy, stride=stride)
+                elif stride != 1:
+                    sc = _avgpool(h, stride)
+                h = jax.nn.relu(r + sc)
+        h = jnp.mean(h, axis=(1, 2))
+        return linear(params["head"], h, policy)
+    raise ValueError(cfg.kind)
+
+
+def vision_loss(params, batch, cfg: VisionConfig, policy: NumericsPolicy):
+    logits = vision_forward(params, batch["x"], cfg, policy)
+    labels = batch["y"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"acc": acc}

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adafactor, adamw, apply_updates, clip_by_global_norm,
+    constant_schedule, cosine_schedule, global_norm, make_optimizer, sgdm,
+)

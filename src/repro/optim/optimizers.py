@@ -1,0 +1,161 @@
+"""Optimizers: SGD-momentum, AdamW, Adafactor; schedules; clipping.
+
+Functional (optax-style but self-contained): ``make_optimizer(name, ...)``
+returns an object with ``init(params) -> state`` and
+``update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``.  Optimizer state inherits parameter shardings under
+pjit (states are tree_maps of the params), so FSDP shards them for free.
+
+Adafactor (factored second moment, no first moment by default) is the
+default for >= 100 B configs to keep per-chip optimizer state within v5e
+HBM (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------- schedules
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+# ---------------------------------------------------------------- momentum
+def sgdm(lr, momentum: float = 0.9, weight_decay: float = 0.0):
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        upd = jax.tree.map(
+            lambda m, p: -lr_t * (m + weight_decay * p), mu, params)
+        return upd, {"mu": mu, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- adamw
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v, p: -lr_t * ((m / c1) / (jnp.sqrt(v / c2) + eps)
+                                     + weight_decay * p),
+            m, v, params)
+        return upd, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- adafactor
+def adafactor(lr, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0):
+    """Factored second-moment optimizer (Shazeer & Stern 2018), no momentum.
+
+    Matrices store row/col factors (O(n+m) state); vectors/scalars store
+    the full second moment.
+    """
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"f": jax.tree.map(leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def leaf(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if g.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * f["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r[..., None] / jnp.maximum(rc[..., None], eps)) * c[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+                nf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                nf = {"v": v}
+            # update clipping (RMS-based)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * (u + weight_decay * p), nf
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [leaf(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        upd = tdef.unflatten([o[0] for o in out])
+        nf = tdef.unflatten([o[1] for o in out])
+        return upd, {"f": nf, "step": step}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr=1e-3, **kw) -> Optimizer:
+    if name == "sgdm":
+        return sgdm(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

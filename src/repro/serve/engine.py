@@ -1,0 +1,59 @@
+"""Batched serving: prefill + decode steps with KV caches.
+
+``make_serve_step`` builds the jit-able one-token decode step the
+``decode_32k`` / ``long_500k`` dry-run cells lower; ``ServingEngine``
+drives batched greedy generation on top of it (examples/serve_lm.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import NumericsPolicy
+from repro.models.transformer import init_lm_caches, lm_forward
+
+
+def make_prefill(cfg: ArchConfig, policy: NumericsPolicy, max_len: int):
+    def prefill(params, tokens, caches):
+        """tokens (B, S_prompt) -> (next_token (B,1), caches)."""
+        logits, caches, _ = lm_forward(params, tokens, cfg, policy,
+                                       caches=caches)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, caches
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, policy: NumericsPolicy,
+                    window: Optional[int] = None):
+    def serve_step(params, tokens, caches):
+        """One decode step: tokens (B, 1) -> (logits, next_token, caches)."""
+        logits, caches, _ = lm_forward(params, tokens, cfg, policy,
+                                       caches=caches, window=window)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return logits, nxt, caches
+    return serve_step
+
+
+class ServingEngine:
+    """Greedy batched generation driver over prefill + decode."""
+
+    def __init__(self, cfg: ArchConfig, policy: NumericsPolicy,
+                 params, max_len: int = 512):
+        self.cfg, self.policy, self.params = cfg, policy, params
+        self.max_len = max_len
+        self.prefill = jax.jit(make_prefill(cfg, policy, max_len))
+        self.step = jax.jit(make_serve_step(cfg, policy))
+
+    def generate(self, prompts, max_new_tokens: int = 32):
+        """prompts: int32 (B, S) -> int32 (B, max_new_tokens)."""
+        B = prompts.shape[0]
+        caches = init_lm_caches(self.cfg, B, self.max_len)
+        nxt, caches = self.prefill(self.params, prompts, caches)
+        outs = [nxt]
+        for _ in range(max_new_tokens - 1):
+            _, nxt, caches = self.step(self.params, nxt, caches)
+            outs.append(nxt)
+        return jnp.concatenate(outs, axis=1)

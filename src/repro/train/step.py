@@ -1,0 +1,61 @@
+"""train_step builders: grad, microbatch accumulation, clipping, update.
+
+``make_train_step`` works for any (params, batch)->(loss, metrics) loss
+function — the LM families and the paper's vision models share it.
+Microbatch gradient accumulation (scan) keeps the activation footprint
+of very large global batches bounded (bubble-free big-batch training,
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer, *,
+                    microbatches: int = 1, clip_norm: float = 1.0):
+    """loss_fn(params, batch) -> (loss, metrics dict of scalars)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss_a, grads_a = carry
+                loss, metrics, grads = grads_of(params, mb)
+                return (loss_a + loss,
+                        jax.tree.map(jnp.add, grads_a, grads)), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), metrics = jax.lax.scan(
+                acc_fn, (jnp.zeros(()), zero), mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.zeros(())
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step

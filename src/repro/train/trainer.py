@@ -1,0 +1,109 @@
+"""Supervised training loop: checkpoint/restart, retry supervision,
+straggler watchdog.  Works on CPU (paper-scale vision/LM runs) and under
+pjit meshes (launch/train.py wires the shardings).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointManager
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 200
+    keep: int = 3
+    log_every: int = 50
+    max_retries: int = 3            # restart-from-checkpoint budget
+    straggler_factor: float = 3.0   # step slower than factor x median -> flag
+    log_fn: Callable = print
+
+
+@dataclass
+class TrainerState:
+    params: object
+    opt_state: object
+    step: int = 0
+    stragglers: list = field(default_factory=list)
+
+
+class Trainer:
+    """Drives train_step with fault tolerance:
+
+    * checkpoints every ``ckpt_every`` steps (atomic, keep-K);
+    * on exception, restores the latest checkpoint and retries (up to
+      ``max_retries``) — node-failure recovery with a step-indexed data
+      pipeline means no sample is double-counted;
+    * wall-time watchdog records steps slower than ``straggler_factor`` x
+      the running median (straggler mitigation signal for the launcher).
+    """
+
+    def __init__(self, train_step, batch_fn, cfg: TrainerConfig):
+        self.train_step = train_step
+        self.batch_fn = batch_fn       # step -> batch
+        self.cfg = cfg
+        self.mgr = (CheckpointManager(cfg.ckpt_dir, cfg.keep)
+                    if cfg.ckpt_dir else None)
+
+    def _maybe_restore(self, state: TrainerState) -> TrainerState:
+        if self.mgr is None:
+            return state
+        tree = {"params": state.params, "opt": state.opt_state}
+        restored, meta = self.mgr.restore_latest(tree)
+        if restored is None:
+            return state
+        return TrainerState(restored["params"], restored["opt"],
+                            step=int(meta["step"]))
+
+    def run(self, state: TrainerState) -> TrainerState:
+        cfg = self.cfg
+        state = self._maybe_restore(state)
+        retries = 0
+        times: list[float] = []
+        history = []
+        while state.step < cfg.total_steps:
+            try:
+                t0 = time.time()
+                batch = self.batch_fn(state.step)
+                params, opt_state, metrics = self.train_step(
+                    state.params, state.opt_state, batch)
+                jax.block_until_ready(jax.tree.leaves(metrics)[0])
+                dt = time.time() - t0
+                state = TrainerState(params, opt_state, state.step + 1,
+                                     state.stragglers)
+                times.append(dt)
+                med = float(np.median(times[-50:]))
+                if len(times) > 5 and dt > cfg.straggler_factor * med:
+                    state.stragglers.append((state.step, dt, med))
+                    cfg.log_fn(f"[watchdog] step {state.step}: {dt:.3f}s "
+                               f"vs median {med:.3f}s — straggler flagged")
+                if state.step % cfg.log_every == 0:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    history.append((state.step, m))
+                    cfg.log_fn(f"step {state.step}: " + " ".join(
+                        f"{k}={v:.4f}" for k, v in m.items()))
+                if self.mgr and state.step % cfg.ckpt_every == 0:
+                    self.mgr.save(state.step,
+                                  {"params": state.params,
+                                   "opt": state.opt_state})
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # node failure model: restore + retry
+                retries += 1
+                cfg.log_fn(f"[supervisor] step {state.step} failed ({e!r}); "
+                           f"retry {retries}/{cfg.max_retries} from checkpoint")
+                if retries > cfg.max_retries or self.mgr is None:
+                    raise
+                state = self._maybe_restore(state)
+        if self.mgr:
+            self.mgr.save(state.step,
+                          {"params": state.params, "opt": state.opt_state})
+        state.history = history  # type: ignore[attr-defined]
+        return state

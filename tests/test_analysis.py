@@ -1,0 +1,77 @@
+"""Roofline analysis: HLO collective parser + term arithmetic."""
+import numpy as np
+
+from repro.analysis.roofline import (
+    V5E, collective_traffic, model_flops_for,
+)
+from repro.configs import SHAPES, get_arch
+
+
+HLO_SAMPLE = """
+  %ar = f32[1024,256]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%sum
+  %ag = f32[4096]{0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[512]{0} reduce-scatter(%z), replica_groups=[1,8]<=[8], to_apply=%sum
+  %cp = f32[128,128]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = f32[256]{0} all-to-all(%v), replica_groups=[2,4]<=[8]
+  %ard = f32[64]{0} all-reduce-start(%q), replica_groups=[2,4]<=[8]
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    t = collective_traffic(HLO_SAMPLE, default_group=8)
+    b = t["bytes"]
+    # all-reduce (1024x256 f32 = 1 MiB, n=4): 2 * 3/4 * 1MiB
+    assert b["all-reduce"] == (2 * 0.75 * 1024 * 256 * 4
+                               + 2 * 0.75 * 64 * 4)  # includes -start op
+    # all-gather (out 16 KiB, n=4): 3/4 * out
+    assert b["all-gather"] == 0.75 * 4096 * 4
+    # reduce-scatter (out 2 KiB, n=8): in = out*8, ring = 7/8 -> 7*out
+    assert b["reduce-scatter"] == 7 * 512 * 4
+    assert b["collective-permute"] == 128 * 128 * 4
+    assert b["all-to-all"] == 0.75 * 256 * 4
+    assert t["counts"]["all-reduce"] == 2
+
+
+def test_collective_parser_ignores_noncollectives():
+    t = collective_traffic("  %d = f32[8,8] dot(%a, %b)\n", 8)
+    assert t["bytes"]["total"] == 0
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_arch("granite-3-2b")
+    n = cfg.active_param_count()
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    assert tr == 6.0 * n * SHAPES["train_4k"].tokens
+    de = model_flops_for(cfg, SHAPES["decode_32k"])
+    assert de == 2.0 * n * 128
+
+
+def test_moe_active_params_below_total():
+    cfg = get_arch("llama4-maverick-400b-a17b")
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()
+    # total roughly 400B, active roughly 17B (config-faithful scale)
+    assert 2e11 < cfg.param_count() < 6e11
+    assert 1e10 < cfg.active_param_count() < 4e10
+
+
+def test_assigned_param_scales():
+    """Sanity: each arch's param count is in the ballpark its name claims."""
+    expect = {
+        "stablelm-12b": (8e9, 16e9),
+        "qwen2.5-32b": (26e9, 40e9),
+        "qwen1.5-110b": (90e9, 130e9),
+        "granite-3-2b": (2e9, 4e9),
+        "llava-next-34b": (30e9, 40e9),
+        "mamba2-780m": (6e8, 1e9),
+        "zamba2-1.2b": (1e9, 1.6e9),
+        "whisper-base": (5e7, 1.5e8),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_arch(name).param_count()
+        assert lo <= n <= hi, (name, n)
+
+
+def test_hardware_constants():
+    assert V5E.peak_flops == 197e12
+    assert V5E.hbm_bw == 819e9
+    assert V5E.ici_bw == 50e9

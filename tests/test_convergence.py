@@ -1,0 +1,50 @@
+"""Paper §VIII miniature: training convergence with approximate multipliers.
+
+CPU-scale reproduction of Fig. 10's claim — AFM16 training converges like
+FP32/bfloat16 with negligible accuracy delta (full curves live in
+benchmarks/bench_convergence.py; this is the fast gating test)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import LENET_300_100
+from repro.core.policy import NumericsPolicy
+from repro.data.pipeline import vision_batches, vision_dataset
+from repro.models.vision import init_vision, vision_forward, vision_loss
+from repro.optim.optimizers import make_optimizer
+from repro.train.step import make_train_step
+
+
+def _train(policy, steps=40, seed=0):
+    cfg = LENET_300_100
+    data = vision_dataset("conv-test", 512, 256, cfg.input_hw, cfg.input_ch,
+                          cfg.n_classes, noise=0.3)
+    params = init_vision(jax.random.PRNGKey(seed), cfg)
+    opt = make_optimizer("sgdm", 0.05)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(
+        lambda p, b: vision_loss(p, b, cfg, policy), opt))
+    it = 0
+    for epoch in range(10):
+        for b in vision_batches(data, 64, epoch):
+            b = {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+            params, state, m = step(params, state, b)
+            it += 1
+            if it >= steps:
+                break
+        if it >= steps:
+            break
+    logits = vision_forward(params, jnp.asarray(data["x_test"]), cfg, policy)
+    acc = float(np.mean(np.argmax(np.asarray(logits), -1) == data["y_test"]))
+    return acc, float(m["loss"])
+
+
+@pytest.mark.slow
+def test_afm16_converges_like_fp32():
+    acc_fp32, loss_fp32 = _train(NumericsPolicy())
+    acc_afm, loss_afm = _train(NumericsPolicy(mode="amsim_jnp",
+                                              multiplier="afm16"))
+    assert acc_fp32 > 0.8, acc_fp32     # the task is learnable
+    assert acc_afm > 0.8, acc_afm       # ... also with approx multipliers
+    assert abs(acc_fp32 - acc_afm) < 0.08   # paper: negligible delta

@@ -1,0 +1,143 @@
+"""Multiplier functional models + Algorithm 1/2 equivalence (paper §V)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.amsim import amsim_multiply, np_amsim_multiply
+from repro.core.float_bits import (
+    np_bits, np_round_mantissa, np_truncate_mantissa,
+)
+from repro.core.lutgen import generate_lut, get_lut
+from repro.core.multipliers import get_multiplier, make_multiplier
+
+FAMILIES16 = ["bf16", "trunc16", "afm16", "mit16", "realm16"]
+
+
+def _rand(n, rng, scale=10.0):
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+# --------------------------------------------------------- Alg.1 == direct
+@pytest.mark.parametrize("name", FAMILIES16 + ["afm12", "trunc4", "mitchell11"])
+def test_lut_simulation_equals_direct_model(name, rng):
+    """The LUT flow must reproduce the black-box model bit-exactly
+    (the paper's core correctness claim for AMSim).  LUTs exist for
+    M <= 12 (paper §V-B: 1..12 mantissa bits); the 32-bit formats are
+    exercised through their M<=12 counterparts."""
+    m = get_multiplier(name)
+    M = m.mantissa_bits
+    lut = generate_lut(m, M)
+    a, b = _rand(20000, rng), _rand(20000, rng)
+    sim = np_amsim_multiply(a, b, lut, M)
+    direct = m.np_mul(a, b)
+    np.testing.assert_array_equal(sim, direct)
+
+
+@pytest.mark.parametrize("name", FAMILIES16)
+def test_np_jnp_twins_agree(name, rng):
+    m = get_multiplier(name)
+    a, b = _rand(20000, rng), _rand(20000, rng)
+    np.testing.assert_array_equal(
+        m.np_mul(a, b), np.asarray(m.jnp_mul(jnp.asarray(a), jnp.asarray(b))))
+
+
+def test_jnp_amsim_equals_np_amsim(rng):
+    m = get_multiplier("afm16")
+    lut = get_lut(m)
+    a, b = _rand(5000, rng), _rand(5000, rng)
+    np.testing.assert_array_equal(
+        np_amsim_multiply(a, b, lut, 7),
+        np.asarray(amsim_multiply(jnp.asarray(a), jnp.asarray(b), lut, 7)))
+
+
+# ----------------------------------------------------------- exactness laws
+def test_fp32_exact_is_ieee(rng):
+    m = get_multiplier("fp32")
+    a, b = _rand(10000, rng), _rand(10000, rng)
+    np.testing.assert_array_equal(m.np_mul(a, b), a * b)
+
+
+def test_bf16_matches_quantized_reference(rng):
+    """bf16 model == truncate-operands + exact product + RNE(7)."""
+    m = get_multiplier("bf16")
+    a, b = _rand(10000, rng), _rand(10000, rng)
+    at = np_truncate_mantissa(a, 7).astype(np.float64)
+    bt = np_truncate_mantissa(b, 7).astype(np.float64)
+    ref = np_round_mantissa((at * bt).astype(np.float32), 7)
+    np.testing.assert_array_equal(m.np_mul(a, b), ref)
+
+
+# -------------------------------------------------- hypothesis: invariants
+@given(st.floats(-1.0000000150474662e+30, 1.0000000150474662e+30,
+                 allow_nan=False, width=32),
+       st.floats(-1.0000000150474662e+30, 1.0000000150474662e+30,
+                 allow_nan=False, width=32),
+       st.sampled_from(FAMILIES16))
+@settings(max_examples=300, deadline=None)
+def test_sign_and_monotone_exponent(a, b, name):
+    """Sign is exactly XOR; magnitude within 2x of the exact product
+    (all families approximate only the mantissa -> error < 1 octave)."""
+    m = get_multiplier(name)
+    a = np.float32(a)
+    b = np.float32(b)
+    c = np.float32(m.np_mul(a, b))
+    exact = np.float64(a) * np.float64(b)
+    # subnormal operands are treated as zero-exponent specials (Alg. 2)
+    if a == 0 or b == 0 or exact == 0 or \
+            abs(np.float64(a)) < 1.2e-38 or abs(np.float64(b)) < 1.2e-38:
+        assert c == 0 or abs(np.float64(c)) < 4 * abs(exact) + 1e-30
+        return
+    if np.isinf(np.float32(exact)) or np.isinf(c):
+        return  # overflow handled as inf
+    if abs(exact) < 1e-37:  # flush-to-zero region (result exp <= 0 + carry)
+        assert c == 0 or abs(np.float64(c)) <= 4 * abs(exact)
+        return
+    assert np.signbit(c) == (np.signbit(a) ^ np.signbit(b))
+    ratio = np.float64(c) / exact
+    assert 0.5 <= ratio <= 2.0, (a, b, c, exact, name)
+
+
+@given(st.integers(1, 12))
+@settings(max_examples=12, deadline=None)
+def test_lut_size_is_4_to_the_m(M):
+    m = make_multiplier("afm", M)
+    lut = generate_lut(m, M)
+    assert lut.shape == (1 << (2 * M),)
+    assert lut.dtype == np.uint32
+    # entries: carry bit 23, mantissa field low 23 bits, nothing above bit 24
+    assert int(lut.max()) < (1 << 24)
+
+
+def test_zero_and_inf_special_cases():
+    m = get_multiplier("afm16")
+    lut = get_lut(m)
+    a = np.array([0.0, 1e38, -1e38, 1.0, -0.0], np.float32)
+    b = np.array([5.0, 1e38, 1e38, 0.0, 3.0], np.float32)
+    out = np_amsim_multiply(a, b, lut, 7)
+    assert out[0] == 0 and out[3] == 0
+    assert np.isinf(out[1]) and out[1] > 0
+    assert np.isinf(out[2]) and out[2] < 0
+    assert np.signbit(out[4])  # signed zero
+
+
+def test_mean_error_ranking(rng):
+    """AFM (bias-compensated) and REALM (piecewise-corrected) must have
+    |mean magnitude bias| below plain Mitchell (the design intent of [29],
+    [30] the models represent).  Magnitude-relative error is used — signed
+    errors of +/- products cancel and would mask Mitchell's ~-3.9% bias."""
+    a, b = _rand(200000, rng, 2.0), _rand(200000, rng, 2.0)
+    exact = np.abs(a.astype(np.float64) * b.astype(np.float64))
+
+    def mean_err(name):
+        c = np.abs(np.float64(get_multiplier(name).np_mul(a, b)))
+        rel = (c - exact) / np.maximum(exact, 1e-30)
+        return rel.mean(), np.abs(rel).mean()
+
+    mit_mean, mit_abs = mean_err("mit16")
+    afm_mean, afm_abs = mean_err("afm16")
+    realm_mean, realm_abs = mean_err("realm16")
+    assert mit_mean < -0.02            # Mitchell underestimates (~ -3.9%)
+    assert abs(afm_mean) < abs(mit_mean)
+    assert abs(realm_mean) < abs(mit_mean)
+    assert realm_abs < mit_abs  # piecewise correction also cuts |error|

@@ -1,0 +1,134 @@
+"""policy_matmul / policy_einsum / approx_conv2d: dispatch + custom VJP."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import NumericsPolicy
+from repro.kernels.ops import approx_conv2d, policy_einsum, policy_matmul
+from repro.kernels.ref import ref_conv2d
+
+NAT = NumericsPolicy()
+SIM = NumericsPolicy(mode="amsim_jnp", multiplier="afm16")
+DIR = NumericsPolicy(mode="direct", multiplier="afm16")
+SUR = NumericsPolicy(mode="surrogate", multiplier="bf16")
+
+ok = lambda x, y: np.testing.assert_allclose(
+    np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-4)
+
+
+def test_native_matmul_and_grads_match_jnp(rng):
+    a = jnp.asarray(rng.standard_normal((4, 6, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    ok(policy_matmul(a, w, NAT), jnp.matmul(a, w))
+    g1 = jax.grad(lambda a, w: jnp.sum(policy_matmul(a, w, NAT) ** 2), (0, 1))(a, w)
+    g2 = jax.grad(lambda a, w: jnp.sum(jnp.matmul(a, w) ** 2), (0, 1))(a, w)
+    ok(g1[0], g2[0]); ok(g1[1], g2[1])
+
+
+def test_amsim_jnp_equals_direct(rng):
+    a = jnp.asarray(rng.standard_normal((4, 6, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(policy_matmul(a, w, SIM)),
+                                  np.asarray(policy_matmul(a, w, DIR)))
+
+
+def test_surrogate_equals_simulated_for_truncation_family(rng):
+    """Beyond-paper surrogate (mask + native dot) == simulated trunc model
+    up to the final-product rounding (exact when products fit f32)."""
+    trunc_sim = NumericsPolicy(mode="direct", multiplier="trunc7")
+    trunc_sur = NumericsPolicy(mode="surrogate", multiplier="trunc7")
+    a = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    sim = policy_matmul(a, w, trunc_sim)
+    sur = policy_matmul(a, w, trunc_sur)
+    # Per-multiply products of the truncated operands are identical; the
+    # simulated model then truncates each *product* to M bits while the
+    # surrogate keeps the exact product for the f32 accumulation (the
+    # documented "up to final-product rounding" difference) -> bounded by
+    # ~k * 2^-M per output element.
+    np.testing.assert_allclose(np.asarray(sim), np.asarray(sur),
+                               rtol=0.05, atol=0.1)
+    assert float(jnp.max(jnp.abs(sim - sur))) > 0  # but not identical
+
+
+def test_approx_backward_flag(rng):
+    a = jnp.asarray(rng.standard_normal((6, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    exact_bwd = dataclasses.replace(SIM, approx_backward=False)
+    g_approx = jax.grad(lambda w: jnp.sum(policy_matmul(a, w, SIM)))(w)
+    g_exact = jax.grad(lambda w: jnp.sum(policy_matmul(a, w, exact_bwd)))(w)
+    g_native = jax.grad(lambda w: jnp.sum(policy_matmul(a, w, NAT)))(w)
+    # exact-backward grads == native grads; approx-backward differs
+    ok(g_exact, g_native)
+    assert float(jnp.max(jnp.abs(g_approx - g_native))) > 0
+
+
+EINSUM_CASES = [
+    ("bqhd,bkhd->bhqk", (2, 7, 3, 8), (2, 9, 3, 8)),
+    ("bhqk,bkhd->bqhd", (2, 3, 7, 9), (2, 9, 3, 8)),
+    ("bqkgd,btkd->bkgqt", (2, 5, 2, 3, 8), (2, 6, 2, 8)),
+    ("bcln,bcsn->bcls", (2, 3, 4, 8), (2, 3, 5, 8)),
+    ("bcsn,bcshp->bchpn", (2, 3, 4, 8), (2, 3, 4, 2, 6)),
+    ("ecd,edf->ecf", (4, 5, 8), (4, 8, 6)),
+]
+
+
+@pytest.mark.parametrize("spec,sa,sb", EINSUM_CASES)
+def test_policy_einsum_matches_jnp(spec, sa, sb, rng):
+    a = jnp.asarray(rng.standard_normal(sa), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(sb), jnp.float32)
+    ok(policy_einsum(spec, a, b, NAT), jnp.einsum(spec, a, b))
+    # surrogate == einsum of RNE(7)-quantized operands
+    from repro.core.float_bits import jnp_round_mantissa as q
+    np.testing.assert_allclose(
+        np.asarray(policy_einsum(spec, a, b, SUR)),
+        np.asarray(jnp.einsum(spec, q(a, 7), q(b, 7),
+                              preferred_element_type=jnp.float32)),
+        rtol=1e-6, atol=1e-6)
+    # gradient path
+    g1 = jax.grad(lambda a, b: jnp.sum(policy_einsum(spec, a, b, NAT) ** 2),
+                  (0, 1))(a, b)
+    g2 = jax.grad(lambda a, b: jnp.sum(jnp.einsum(spec, a, b) ** 2),
+                  (0, 1))(a, b)
+    ok(g1[0], g2[0]); ok(g1[1], g2[1])
+
+
+@given(st.integers(1, 3), st.integers(1, 16), st.integers(1, 16),
+       st.integers(1, 16))
+@settings(max_examples=25, deadline=None)
+def test_matmul_shape_property(batch, m, k, n):
+    """(B, m, k) @ (k, n) keeps shape contract for every mode."""
+    key = jax.random.PRNGKey(batch * 1000 + m * 100 + k * 10 + n)
+    a = jax.random.normal(key, (batch, m, k), jnp.float32)
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    for pol in (NAT, SIM, SUR):
+        out = policy_matmul(a, w, pol)
+        assert out.shape == (batch, m, n)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_conv2d_fwd_bwd_vs_lax(stride, padding, rng):
+    x = jnp.asarray(rng.standard_normal((2, 9, 9, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 3, 4)), jnp.float32)
+    ok(approx_conv2d(x, w, stride, padding, NAT),
+       ref_conv2d(x, w, stride, padding))
+    g1 = jax.grad(lambda x, w: jnp.sum(
+        approx_conv2d(x, w, stride, padding, NAT) ** 2), (0, 1))(x, w)
+    g2 = jax.grad(lambda x, w: jnp.sum(
+        ref_conv2d(x, w, stride, padding) ** 2), (0, 1))(x, w)
+    ok(g1[0], g2[0]); ok(g1[1], g2[1])
+
+
+def test_conv2d_approx_runs_and_differs(rng):
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 3, 4)), jnp.float32)
+    exact = approx_conv2d(x, w, 1, "SAME", NAT)
+    approx = approx_conv2d(x, w, 1, "SAME", SIM)
+    rel = float(jnp.max(jnp.abs(exact - approx)) / jnp.max(jnp.abs(exact)))
+    assert 0 < rel < 0.2
