@@ -10,6 +10,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_batched_gemm,
         bench_convergence,
         bench_crossformat,
         bench_gemm_sim,
@@ -21,6 +22,7 @@ def main() -> None:
 
     sections = [
         ("Fig.6 GEMM simulation perf", bench_gemm_sim.main),
+        ("Batched approx-GEMM engine", bench_batched_gemm.main),
         ("Fig.10/Table III convergence & accuracy", bench_convergence.main),
         ("Table IV cross-format matrix", bench_crossformat.main),
         ("Fig.11 pruning x multipliers", bench_pruning.main),

@@ -19,8 +19,14 @@ import jax.numpy as jnp
 from .float_bits import MNT_BITS, jnp_bits, jnp_float, np_bits, np_float
 
 
-def _amsim(ua, ub, lut, M: int, xp):
-    """Shared Alg. 2 body over uint32 words; xp is numpy or jnp."""
+def _amsim(ua, ub, lut, M: int, xp, packed: bool = False):
+    """Shared Alg. 2 body over uint32 words; xp is numpy or jnp.
+
+    ``packed=True`` reads the uint16 packed-LUT layout of
+    ``lutgen.pack_lut``: entry = (carry << M) | top-M mantissa bits.
+    The unpack is two shifts after the gather, so the gather itself moves
+    half the bytes (the VMEM-footprint win for the Pallas kernels).
+    """
     mnt_mask = xp.uint32(0x007F_FFFF)
     amnt = ua & mnt_mask
     bmnt = ub & mnt_mask
@@ -33,6 +39,11 @@ def _amsim(ua, ub, lut, M: int, xp):
         entry = lut[idx]
     else:
         entry = jnp.take(lut, idx.astype(jnp.int32), indices_are_sorted=False)
+    if packed:
+        entry = entry.astype(xp.uint32)
+        entry = ((entry >> xp.uint32(M)) << xp.uint32(MNT_BITS)) | (
+            (entry & xp.uint32((1 << M) - 1)) << xp.uint32(MNT_BITS - M)
+        )
     carry = (entry >> xp.uint32(MNT_BITS)) & xp.uint32(1)  # line 9
     mnt = entry & mnt_mask  # line 10
     sign = ((ua ^ ub) >> xp.uint32(31)).astype(xp.uint32)  # line 11
@@ -49,15 +60,15 @@ def _amsim(ua, ub, lut, M: int, xp):
     return out
 
 
-def amsim_multiply(a, b, lut, M: int):
+def amsim_multiply(a, b, lut, M: int, packed: bool = False):
     """Approximate product of broadcastable f32 arrays ``a``, ``b`` (jnp)."""
     a, b = jnp.broadcast_arrays(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
-    lut = jnp.asarray(lut, jnp.uint32)
-    return jnp_float(_amsim(jnp_bits(a), jnp_bits(b), lut, M, jnp))
+    lut = jnp.asarray(lut, jnp.uint16 if packed else jnp.uint32)
+    return jnp_float(_amsim(jnp_bits(a), jnp_bits(b), lut, M, jnp, packed=packed))
 
 
-def np_amsim_multiply(a, b, lut, M: int):
+def np_amsim_multiply(a, b, lut, M: int, packed: bool = False):
     """numpy twin of ``amsim_multiply`` (CPU simulation baseline)."""
     a, b = np.broadcast_arrays(np.asarray(a, np.float32), np.asarray(b, np.float32))
-    lut = np.asarray(lut, np.uint32)
-    return np_float(_amsim(np_bits(a), np_bits(b), lut, M, np))
+    lut = np.asarray(lut, np.uint16 if packed else np.uint32)
+    return np_float(_amsim(np_bits(a), np_bits(b), lut, M, np, packed=packed))

@@ -26,6 +26,10 @@ from .float_bits import MNT_BITS, MNT_MASK, np_bits, np_float, np_pack
 from .multipliers import Multiplier, get_multiplier
 
 _CACHE: dict[tuple[str, int], np.ndarray] = {}
+_PACKED_CACHE: dict[tuple[str, int], np.ndarray | None] = {}
+
+# Widest M whose packed entry (carry bit + M mantissa bits) fits uint16.
+PACK_MAX_M = 15
 
 # Safe exponent per Alg. 1 line 4: N = K = 127 -> product exponent
 # N + K - 127 = 127, well inside [1, 254] even after a carry.
@@ -51,6 +55,51 @@ def generate_lut(multiplier: Multiplier, M: int | None = None) -> np.ndarray:
     carry = (exp_c > un_normalized_exp).astype(np.uint32)
     entry = (carry << np.uint32(MNT_BITS)) | (uc & MNT_MASK)  # line 14
     return entry.reshape(-1)
+
+
+def pack_lut(lut: np.ndarray, M: int) -> np.ndarray:
+    """Compress a uint32 LUT to uint16: entry = (carry << M) | top-M mantissa.
+
+    Valid only when every entry's mantissa field is confined to its top-M
+    bits — true for every mantissa core in ``multipliers.py`` (they all
+    mask the result to M significant bits), and checked here so a future
+    full-precision model fails loudly instead of silently losing bits.
+    Halves the table footprint (VMEM for the Pallas kernels): 32 KiB
+    instead of 64 KiB for M=7.
+    """
+    if not 1 <= M <= PACK_MAX_M:
+        raise ValueError(f"packed LUT requires 1 <= M <= {PACK_MAX_M}, got {M}")
+    lut = np.asarray(lut, np.uint32)
+    carry = (lut >> np.uint32(MNT_BITS)) & np.uint32(1)
+    mnt = lut & MNT_MASK
+    low = np.uint32((1 << (MNT_BITS - M)) - 1)
+    if np.any(mnt & low):
+        raise ValueError(
+            f"LUT has mantissa bits below the top {M}; not packable")
+    return ((carry << np.uint32(M)) | (mnt >> np.uint32(MNT_BITS - M))).astype(
+        np.uint16)
+
+
+def unpack_lut(packed: np.ndarray, M: int) -> np.ndarray:
+    """Inverse of ``pack_lut``: uint16 -> the canonical uint32 layout."""
+    p = np.asarray(packed, np.uint32)
+    carry = p >> np.uint32(M)
+    mnt = (p & np.uint32((1 << M) - 1)) << np.uint32(MNT_BITS - M)
+    return ((carry << np.uint32(MNT_BITS)) | mnt).astype(np.uint32)
+
+
+def get_packed_lut(name_or_mult, M: int | None = None,
+                   cache_dir=None) -> np.ndarray | None:
+    """Packed-uint16 LUT, or None if this multiplier's table is unpackable."""
+    mult = get_multiplier(name_or_mult) if isinstance(name_or_mult, str) else name_or_mult
+    M = mult.mantissa_bits if M is None else M
+    key = (mult.name, M)
+    if key not in _PACKED_CACHE:
+        try:
+            _PACKED_CACHE[key] = pack_lut(get_lut(mult, M, cache_dir), M)
+        except ValueError:
+            _PACKED_CACHE[key] = None
+    return _PACKED_CACHE[key]
 
 
 def lut_path(name: str, M: int, root: str | os.PathLike | None = None) -> Path:

@@ -1,10 +1,12 @@
-"""Pallas TPU kernel: LUT-simulated approximate GEMM (paper §V-B + §VI-D).
+"""Pallas TPU kernels: LUT-simulated approximate GEMM (paper §V-B + §VI-D).
 
 TPU adaptation of the paper's custom CUDA GEMM with AMSim device function:
 
   * the mantissa-product LUT lives in **VMEM** as a pallas_call operand
     (the TPU analogue of the paper's texture-memory placement — small,
-    read-only, heavily reused: 64 KiB for M=7 vs ~16 MiB VMEM);
+    read-only, heavily reused: 64 KiB for M=7 vs ~16 MiB VMEM).  With the
+    packed uint16 layout (``lutgen.pack_lut``) the footprint halves again,
+    freeing VMEM for larger operand tiles;
   * HBM->VMEM movement is expressed with explicit BlockSpec tiling
     (bm x bk and bk x bn operand tiles, bm x bn f32 accumulator scratch),
     the TPU analogue of the paper's 16x16 shared-memory tiles;
@@ -17,9 +19,23 @@ TPU adaptation of the paper's custom CUDA GEMM with AMSim device function:
     is that the cost is **independent of the multiplier design** — any
     model compiles to the same gather.
 
-Grid: (m/bm, n/bn, k/bk) with the contraction dimension innermost
-("arbitrary" semantics) so the accumulator tile stays resident in VMEM
-across k-steps.  Operand tiles are multiples of 128 to align MXU/VPU
+Two entry points:
+
+``approx_gemm``          (m, k) @ (k, n).  Grid (m/bm, n/bn, k/bk), the
+                         contraction dimension innermost ("arbitrary"
+                         semantics) so the accumulator tile stays resident
+                         in VMEM across k-steps.
+``approx_gemm_batched``  (B, m, k) @ (B, k, n).  Grid (B, m/bm, n/bn,
+                         k/bk): the batch dimension is the outermost
+                         ("parallel") grid axis and the LUT block index
+                         is constant, so the one table is broadcast to
+                         every batch element instead of being re-staged
+                         per element as the vmap-over-pallas_call
+                         fallback does.
+
+Block sizes default to the autotuner's cached winner for the (shape
+bucket, M, backend) — see ``kernels/autotune.py``; explicit bm/bn/bk/chunk
+arguments override.  Operand tiles are multiples of 128 to align MXU/VPU
 lanes and HBM burst transfers.
 """
 from __future__ import annotations
@@ -33,78 +49,117 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.amsim import _amsim
 from repro.core.float_bits import jnp_float
+from repro.kernels import autotune
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
 
 
-def _amsim_kernel(a_ref, b_ref, lut_ref, o_ref, acc_ref, *, M: int, chunk: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    a = a_ref[...]  # (bm, bk) f32
-    b = b_ref[...]  # (bk, bn) f32
-    lut = lut_ref[...]  # (2^2M,) uint32, VMEM-resident
+def _gather_gemm_tile(a, b, lut, acc, *, M: int, chunk: int, packed: bool):
+    """Rank-`chunk` gather-GEMM update of the f32 accumulator tile."""
     au = jax.lax.bitcast_convert_type(a, jnp.uint32)
     bu = jax.lax.bitcast_convert_type(b, jnp.uint32)
     bm, bk = a.shape
     bn = b.shape[1]
 
     def body(i, acc):
-        # Rank-`chunk` update: gather-simulate a (bm, chunk, bn) product
-        # brick on the VPU, reduce the chunk axis into the f32 accumulator.
+        # Gather-simulate a (bm, chunk, bn) product brick on the VPU,
+        # reduce the chunk axis into the f32 accumulator.
         ac = jax.lax.dynamic_slice(au, (0, i * chunk), (bm, chunk))
         bc = jax.lax.dynamic_slice(bu, (i * chunk, 0), (chunk, bn))
         ua, ub = jnp.broadcast_arrays(ac[:, :, None], bc[None, :, :])
-        prod = jnp_float(_amsim(ua, ub, lut, M, jnp))
+        prod = jnp_float(_amsim(ua, ub, lut, M, jnp, packed=packed))
         return acc + jnp.sum(prod, axis=1, dtype=jnp.float32)
 
-    acc_ref[...] = jax.lax.fori_loop(0, bk // chunk, body, acc_ref[...])
+    return jax.lax.fori_loop(0, bk // chunk, body, acc)
+
+
+def _amsim_kernel(a_ref, b_ref, lut_ref, o_ref, acc_ref, *,
+                  M: int, chunk: int, packed: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] = _gather_gemm_tile(
+        a_ref[...], b_ref[...], lut_ref[...], acc_ref[...],
+        M=M, chunk=chunk, packed=packed)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
         o_ref[...] = acc_ref[...]
 
 
-def _pad_to(x, mult0, mult1):
-    p0 = (-x.shape[0]) % mult0
-    p1 = (-x.shape[1]) % mult1
-    if p0 or p1:
-        x = jnp.pad(x, ((0, p0), (0, p1)))
+def _amsim_kernel_batched(a_ref, b_ref, lut_ref, o_ref, acc_ref, *,
+                          M: int, chunk: int, packed: bool):
+    # Block shapes carry a leading singleton batch axis; k is grid dim 3.
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] = _gather_gemm_tile(
+        a_ref[0], b_ref[0], lut_ref[...], acc_ref[...],
+        M=M, chunk=chunk, packed=packed)
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...]
+
+
+def _pad_to(x, *mults):
+    """Zero-pad the trailing len(mults) dims of x up to the given multiples."""
+    lead = x.ndim - len(mults)
+    pads = [(0, 0)] * lead + [
+        (0, (-x.shape[lead + i]) % m) for i, m in enumerate(mults)
+    ]
+    if any(p for _, p in pads):
+        x = jnp.pad(x, pads)
     return x
+
+
+def _ceil128(x: int) -> int:
+    return -(-x // 128) * 128
+
+
+def _resolve(kind, m, k, n, M, batch, bm, bn, bk, chunk, interpret):
+    """Fill unset tiling params from the autotune cache.
+
+    Autotuned/default block sizes are clamped to the 128-rounded problem
+    dims (a cache entry covers a pow2 bucket, so e.g. bk=256 must not pad
+    a k=32 call out to 256 — 8x wasted gathers); explicit arguments are
+    taken as-is.  chunk is always clamped to bk.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if None in (bm, bn, bk, chunk):
+        cfg = autotune.get_block_config(kind, m, k, n, M, batch=batch)
+        bm = min(cfg.bm, _ceil128(m)) if bm is None else bm
+        bn = min(cfg.bn, _ceil128(n)) if bn is None else bn
+        bk = min(cfg.bk, _ceil128(k)) if bk is None else bk
+        chunk = cfg.chunk if chunk is None else chunk
+    # The kernel iterates fori_loop(0, bk // chunk): chunk MUST divide bk
+    # or the tail k-elements of every block are silently dropped.  Snap
+    # down to the nearest divisor (static at trace time).
+    chunk = min(chunk, bk)
+    while bk % chunk:
+        chunk -= 1
+    return bm, bn, bk, chunk, interpret
 
 
 @functools.partial(
     jax.jit, static_argnames=("M", "bm", "bn", "bk", "chunk", "interpret")
 )
-def approx_gemm(
-    a,
-    b,
-    lut,
-    M: int,
-    *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
-    chunk: int = 8,
-    interpret: bool | None = None,
-):
-    """LUT-simulated GEMM: (m, k) @ (k, n) -> (m, n), FP32 accumulate.
-
-    Zero padding is safe: AMSim flushes zero-exponent operands to zero
-    (Alg. 2 line 13), so padded rows/cols contribute exactly 0.
-    """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _approx_gemm_impl(a, b, lut, M, *, bm, bn, bk, chunk, interpret):
     m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
+    n = b.shape[1]
     a = _pad_to(a.astype(jnp.float32), bm, bk)
     b = _pad_to(b.astype(jnp.float32), bk, bn)
     mp, kp = a.shape
     np_ = b.shape[1]
-    lut = jnp.asarray(lut, jnp.uint32)
+    packed = lut.dtype == jnp.uint16
     grid = (mp // bm, np_ // bn, kp // bk)
     out = pl.pallas_call(
-        functools.partial(_amsim_kernel, M=M, chunk=min(chunk, bk)),
+        functools.partial(_amsim_kernel, M=M, chunk=chunk, packed=packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -114,9 +169,105 @@ def approx_gemm(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(a, b, lut)
     return out[:m, :n]
+
+
+def approx_gemm(
+    a,
+    b,
+    lut,
+    M: int,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    chunk: int | None = None,
+    interpret: bool | None = None,
+):
+    """LUT-simulated GEMM: (m, k) @ (k, n) -> (m, n), FP32 accumulate.
+
+    ``lut`` may be the canonical uint32 table or the packed uint16 one
+    (detected by dtype).  Zero padding is safe: AMSim flushes
+    zero-exponent operands to zero (Alg. 2 line 13), so padded rows/cols
+    contribute exactly 0.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    lut = jnp.asarray(lut)
+    lut = lut if lut.dtype == jnp.uint16 else lut.astype(jnp.uint32)
+    bm, bn, bk, chunk, interpret = _resolve(
+        "gemm2d", m, k, n, M, 0, bm, bn, bk, chunk, interpret)
+    return _approx_gemm_impl(a, b, lut, M, bm=bm, bn=bn, bk=bk,
+                             chunk=chunk, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("M", "bm", "bn", "bk", "chunk", "interpret")
+)
+def _approx_gemm_batched_impl(a, b, lut, M, *, bm, bn, bk, chunk, interpret):
+    B, m, k = a.shape
+    n = b.shape[2]
+    a = _pad_to(a.astype(jnp.float32), bm, bk)
+    b = _pad_to(b.astype(jnp.float32), bk, bn)
+    mp, kp = a.shape[1:]
+    np_ = b.shape[2]
+    packed = lut.dtype == jnp.uint16
+    grid = (B, mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_amsim_kernel_batched, M=M, chunk=chunk,
+                          packed=packed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+            # LUT block index is constant: one VMEM-resident table is
+            # broadcast across the whole batch grid axis.
+            pl.BlockSpec((lut.shape[0],), lambda bb, i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b, lut)
+    return out[:, :m, :n]
+
+
+def approx_gemm_batched(
+    a,
+    b,
+    lut,
+    M: int,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    chunk: int | None = None,
+    interpret: bool | None = None,
+):
+    """Batched LUT-simulated GEMM: (B, m, k) @ (B, k, n) -> (B, m, n).
+
+    One 4-D-grid pallas_call — the batch axis is a parallel grid
+    dimension with the LUT broadcast across it, replacing the
+    vmap-over-pallas_call / lax.map fallbacks.  Accepts uint32 or packed
+    uint16 LUTs (dtype-detected); accumulation is FP32 (paper §VII).
+    """
+    assert a.ndim == 3 and b.ndim == 3, (a.shape, b.shape)
+    B, m, k = a.shape
+    B2, k2, n = b.shape
+    assert B == B2 and k == k2, (a.shape, b.shape)
+    lut = jnp.asarray(lut)
+    lut = lut if lut.dtype == jnp.uint16 else lut.astype(jnp.uint32)
+    bm, bn, bk, chunk, interpret = _resolve(
+        "gemm3d", m, k, n, M, B, bm, bn, bk, chunk, interpret)
+    return _approx_gemm_batched_impl(a, b, lut, M, bm=bm, bn=bn, bk=bk,
+                                     chunk=chunk, interpret=interpret)

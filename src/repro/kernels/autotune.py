@@ -1,0 +1,224 @@
+"""Block-size autotuner for the approximate-GEMM kernels.
+
+The paper's CUDA GEMM hard-codes 16x16 shared-memory tiles; on TPU (and in
+interpret mode on CPU) the right (bm, bn, bk, chunk) depends on the shape,
+the LUT size (M) and the backend.  This module sweeps a candidate list with
+the real kernel and caches the winner in a JSON file on disk, keyed by
+
+    <backend>|<kind>|<shape bucket>|M<M>
+
+where *kind* is ``gemm2d`` / ``gemm3d`` and the shape bucket rounds every
+dimension up to a power of two (so one sweep covers a family of nearby
+shapes).  ``approx_gemm`` / ``approx_gemm_batched`` consult the cache at
+trace time via :func:`get_block_config`; a miss falls back to safe
+defaults — tuning itself only runs when :func:`autotune` is called
+explicitly (benchmarks/bench_batched_gemm.py --autotune).
+
+Cache file schema (``REPRO_AUTOTUNE_CACHE``, default
+``/tmp/repro_autotune/gemm_blocks.json``)::
+
+    {
+      "version": 1,
+      "entries": {
+        "cpu|gemm3d|b8_m256_k256_n256|M7": {
+          "bm": 128, "bn": 128, "bk": 256, "chunk": 64, "us": 1234.5
+        }
+      }
+    }
+
+A corrupt or unreadable file is treated as empty (and overwritten on the
+next tune) — never an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """One pallas_call tiling: operand tiles (bm, bk) x (bk, bn), gather
+    bricks of `chunk` contraction steps."""
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+    chunk: int = 8
+
+    def astuple(self):
+        return (self.bm, self.bn, self.bk, self.chunk)
+
+
+# Fallbacks when no tuned entry exists.  The batched kernel defaults to a
+# deeper k-tile / wider gather brick: one grid point per (batch, m, n) tile
+# amortises kernel-dispatch overhead that the vmapped 2-D path pays per
+# k-block (interpret mode) and keeps the accumulator resident longer (TPU).
+DEFAULT_2D = BlockConfig(128, 128, 128, 8)
+DEFAULT_BATCHED = BlockConfig(128, 128, 256, 64)
+
+CANDIDATES_2D = [
+    BlockConfig(128, 128, 128, 8),
+    BlockConfig(128, 128, 128, 32),
+    BlockConfig(128, 128, 256, 32),
+    BlockConfig(256, 128, 128, 8),
+    BlockConfig(128, 256, 128, 16),
+]
+CANDIDATES_BATCHED = [
+    BlockConfig(128, 128, 128, 32),
+    BlockConfig(128, 128, 256, 32),
+    BlockConfig(128, 128, 256, 64),
+    BlockConfig(128, 128, 512, 64),
+    BlockConfig(256, 128, 256, 32),
+]
+
+_MEM: dict[str, BlockConfig] | None = None  # in-process mirror of the file
+
+
+# ------------------------------------------------------------------ cache IO
+def cache_path() -> Path:
+    return Path(os.environ.get(
+        "REPRO_AUTOTUNE_CACHE", "/tmp/repro_autotune/gemm_blocks.json"))
+
+
+def _load_file() -> dict[str, BlockConfig]:
+    """Parse the on-disk cache; any corruption degrades to an empty cache."""
+    try:
+        with open(cache_path()) as f:
+            raw = json.load(f)
+        if not isinstance(raw, dict) or raw.get("version") != SCHEMA_VERSION:
+            return {}
+        out = {}
+        for key, e in raw.get("entries", {}).items():
+            cfg = BlockConfig(int(e["bm"]), int(e["bn"]),
+                              int(e["bk"]), int(e["chunk"]))
+            if all(v > 0 for v in cfg.astuple()):  # drop nonsense entries
+                out[key] = cfg
+        return out
+    except (OSError, ValueError, KeyError, TypeError):
+        return {}
+
+
+def _entries() -> dict[str, BlockConfig]:
+    global _MEM
+    if _MEM is None:
+        _MEM = _load_file()
+    return _MEM
+
+
+def reload_cache() -> None:
+    """Drop the in-process mirror; next lookup re-reads the file."""
+    global _MEM
+    _MEM = None
+
+
+def _save_entry(key: str, cfg: BlockConfig, us: float) -> None:
+    path = cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if not isinstance(raw, dict) or raw.get("version") != SCHEMA_VERSION \
+                or not isinstance(raw.get("entries"), dict):
+            raw = {"version": SCHEMA_VERSION, "entries": {}}
+    except (OSError, ValueError):
+        raw = {"version": SCHEMA_VERSION, "entries": {}}
+    raw["entries"][key] = {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk,
+                           "chunk": cfg.chunk, "us": round(us, 1)}
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(raw, indent=1, sort_keys=True))
+    os.replace(tmp, path)  # atomic publish (mirrors lutgen's LUT cache)
+    _entries()[key] = cfg
+
+
+# ------------------------------------------------------------------ keying
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def shape_bucket(m: int, k: int, n: int, batch: int = 0) -> str:
+    """Power-of-two bucket so one tuned entry covers nearby shapes."""
+    parts = []
+    if batch:
+        parts.append(f"b{_pow2_ceil(batch)}")
+    parts += [f"m{_pow2_ceil(m)}", f"k{_pow2_ceil(k)}", f"n{_pow2_ceil(n)}"]
+    return "_".join(parts)
+
+
+def cache_key(kind: str, m: int, k: int, n: int, M: int,
+              batch: int = 0, backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    return f"{backend}|{kind}|{shape_bucket(m, k, n, batch)}|M{M}"
+
+
+# ------------------------------------------------------------------ lookup
+def get_block_config(kind: str, m: int, k: int, n: int, M: int,
+                     batch: int = 0, backend: str | None = None) -> BlockConfig:
+    """Tuned winner for this bucket, or the kind's default on a miss."""
+    hit = _entries().get(cache_key(kind, m, k, n, M, batch, backend))
+    if hit is not None:
+        return hit
+    return DEFAULT_BATCHED if kind == "gemm3d" else DEFAULT_2D
+
+
+# ------------------------------------------------------------------ tuning
+def _time_call(fn, *args, iters: int = 2) -> float:
+    jax.block_until_ready(fn(*args))  # compile + warm
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def autotune(kind: str, a, b, lut, M: int, *, candidates=None,
+             interpret: bool | None = None, iters: int = 2,
+             save: bool = True) -> BlockConfig:
+    """Sweep candidate tilings with the real kernel; cache + return the winner.
+
+    ``a``/``b`` are representative operands: (m, k)/(k, n) for ``gemm2d``,
+    (B, m, k)/(B, k, n) for ``gemm3d``.  Candidates that fail to lower
+    (e.g. VMEM overflow on TPU) are skipped; if every candidate fails the
+    default config is returned untouched.
+    """
+    from repro.kernels.approx_gemm import approx_gemm, approx_gemm_batched
+
+    batched = kind == "gemm3d"
+    if candidates is None:
+        candidates = CANDIDATES_BATCHED if batched else CANDIDATES_2D
+    if batched:
+        B, m, k = a.shape
+        n = b.shape[-1]
+        run = lambda cfg: approx_gemm_batched(
+            a, b, lut, M, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk, chunk=cfg.chunk,
+            interpret=interpret)
+    else:
+        B = 0
+        m, k = a.shape
+        n = b.shape[-1]
+        run = lambda cfg: approx_gemm(
+            a, b, lut, M, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk, chunk=cfg.chunk,
+            interpret=interpret)
+
+    best, best_t = None, float("inf")
+    for cfg in candidates:
+        try:
+            t = _time_call(lambda: run(cfg), iters=iters)
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = cfg, t
+    if best is None:
+        return DEFAULT_BATCHED if batched else DEFAULT_2D
+    if save:
+        _save_entry(cache_key(kind, m, k, n, M, B), best, best_t * 1e6)
+    return best

@@ -31,16 +31,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.float_bits import jnp_truncate_mantissa, jnp_round_mantissa
-from repro.core.lutgen import get_lut
+from repro.core.lutgen import get_lut, get_packed_lut
 from repro.core.multipliers import get_multiplier
 from repro.core.policy import NumericsPolicy
-from repro.kernels.approx_gemm import approx_gemm
+from repro.kernels.approx_gemm import approx_gemm, approx_gemm_batched
 from repro.kernels.ref import ref_amsim_gemm, ref_direct_gemm, ref_im2col
 
 
 # =====================================================================
-# 2-D GEMM dispatch
+# GEMM dispatch (2-D and stacked-batch 3-D)
 # =====================================================================
+
+def _amsim_lut(mult):
+    """Kernel LUT for ``mult``: packed uint16 when the table allows it
+    (all registered cores confine results to the top-M mantissa bits),
+    halving VMEM footprint; canonical uint32 otherwise."""
+    packed = get_packed_lut(mult)
+    return packed if packed is not None else get_lut(mult)
+
 
 def _gemm2d(a, b, policy: NumericsPolicy):
     """(m, k) @ (k, n) -> (m, n) under the policy's numerics. f32 accumulate."""
@@ -50,11 +58,31 @@ def _gemm2d(a, b, policy: NumericsPolicy):
     mult = get_multiplier(policy.multiplier)
     M = mult.mantissa_bits
     if mode == "amsim":
-        lut = get_lut(mult)
-        return approx_gemm(a, b, lut, M)
+        return approx_gemm(a, b, _amsim_lut(mult), M)
     if mode == "amsim_jnp":
         lut = get_lut(mult)
         return ref_amsim_gemm(a, b, jnp.asarray(lut), M)
+    if mode == "direct":
+        return ref_direct_gemm(a, b, mult)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _gemm_batched(a, b, policy: NumericsPolicy):
+    """(B, m, k) @ (B, k, n) -> (B, m, n): the batched engine.
+
+    ``amsim`` lowers to the single 4-D-grid Pallas kernel (LUT broadcast
+    across the batch axis); the jnp modes use the batch-generalised
+    oracles.  This replaces the per-element ``lax.map`` fallback, so one
+    kernel launch covers the whole batch in every attention score/value
+    contraction, MoE expert stack, and decode step.
+    """
+    mode = policy.mode
+    mult = get_multiplier(policy.multiplier)
+    M = mult.mantissa_bits
+    if mode == "amsim":
+        return approx_gemm_batched(a, b, _amsim_lut(mult), M)
+    if mode == "amsim_jnp":
+        return ref_amsim_gemm(a, b, jnp.asarray(get_lut(mult)), M)
     if mode == "direct":
         return ref_direct_gemm(a, b, mult)
     raise ValueError(f"unknown mode {mode!r}")
@@ -65,7 +93,8 @@ def _matmul_nograd(a, b, policy: NumericsPolicy):
 
     Three supported layouts (covering every call site in models/):
       * b is 2-D (weight matmul): fold a's batch into m — single GEMM.
-      * equal batch dims (attention-style): flatten batch, map the GEMM.
+      * equal batch dims (attention-style): flatten batch, one batched
+        GEMM through the 4-D-grid kernel (``_gemm_batched``).
       * scalar/no batch: single GEMM.
     """
     a = a.astype(jnp.float32)
@@ -92,12 +121,15 @@ def _matmul_nograd(a, b, policy: NumericsPolicy):
         out = _gemm2d(a.reshape(-1, k), b, policy)
         return out.reshape(*batch, m, b.shape[-1])
     if a.shape[:-2] == b.shape[:-2]:
+        # Equal batch dims (attention scores/values, MoE expert stacks):
+        # flatten the batch and run the batched engine — one kernel
+        # launch, not a lax.map over per-example 2-D GEMMs.
         batch = a.shape[:-2]
         m, k = a.shape[-2:]
         n = b.shape[-1]
         af = a.reshape((-1, m, k))
         bf = b.reshape((-1, k, n))
-        out = jax.lax.map(lambda ab: _gemm2d(ab[0], ab[1], policy), (af, bf))
+        out = _gemm_batched(af, bf, policy)
         return out.reshape(*batch, m, n)
     # General broadcasting: broadcast batch dims then recurse.
     batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])

@@ -20,52 +20,48 @@ from repro.core.multipliers import Multiplier
 _K_CHUNK = 128
 
 
+def _elementwise_gemm(a, b, mul):
+    """Shared oracle body: (..., m, k) @ (..., k, n) with ``mul`` as the
+    scalar product.  Equal leading batch dims; k is chunked so the
+    (..., m, chunk, n) intermediate stays bounded at LeNet scale."""
+    k = a.shape[-1]
+    assert b.shape[-2] == k and a.shape[:-2] == b.shape[:-2], (a.shape, b.shape)
+    m, n = a.shape[-2], b.shape[-1]
+    batch = a.shape[:-2]
+
+    def chunk(acc, idx):
+        ac = jax.lax.dynamic_slice_in_dim(a, idx, _K_CHUNK, axis=a.ndim - 1)
+        bc = jax.lax.dynamic_slice_in_dim(b, idx, _K_CHUNK, axis=b.ndim - 2)
+        prod = mul(ac[..., :, :, None], bc[..., None, :, :])
+        return acc + jnp.sum(prod, axis=-2, dtype=jnp.float32), None
+
+    if k % _K_CHUNK == 0 and k > _K_CHUNK:
+        acc = jnp.zeros(batch + (m, n), jnp.float32)
+        acc, _ = jax.lax.scan(
+            chunk, acc, jnp.arange(0, k, _K_CHUNK, dtype=jnp.int32)
+        )
+        return acc
+    prod = mul(a[..., :, :, None], b[..., None, :, :])
+    return jnp.sum(prod, axis=-2, dtype=jnp.float32)
+
+
 def ref_amsim_gemm(a, b, lut, M: int):
     """LUT-simulated GEMM oracle: out[i,j] = sum_k amsim(a[i,k], b[k,j]).
 
-    Accumulation in FP32 (paper §VII).  a: (m, k) f32, b: (k, n) f32.
+    Accumulation in FP32 (paper §VII).  a: (..., m, k), b: (..., k, n)
+    f32 with equal leading batch dims — the portable (``amsim_jnp``)
+    twin of ``approx_gemm`` / ``approx_gemm_batched``.
     """
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
     lut = jnp.asarray(lut, jnp.uint32)
-
-    def chunk(carry, idx):
-        acc = carry
-        ac = jax.lax.dynamic_slice(a, (0, idx), (m, _K_CHUNK))
-        bc = jax.lax.dynamic_slice(b, (idx, 0), (_K_CHUNK, n))
-        prod = amsim_multiply(ac[:, :, None], bc[None, :, :], lut, M)
-        return acc + jnp.sum(prod, axis=1, dtype=jnp.float32), None
-
-    if k % _K_CHUNK == 0 and k > _K_CHUNK:
-        acc = jnp.zeros((m, n), jnp.float32)
-        acc, _ = jax.lax.scan(
-            chunk, acc, jnp.arange(0, k, _K_CHUNK, dtype=jnp.int32)
-        )
-        return acc
-    prod = amsim_multiply(a[:, :, None], b[None, :, :], lut, M)
-    return jnp.sum(prod, axis=1, dtype=jnp.float32)
+    return _elementwise_gemm(a, b, lambda x, y: amsim_multiply(x, y, lut, M))
 
 
 def ref_direct_gemm(a, b, multiplier: Multiplier):
-    """Direct bit-manipulation GEMM oracle (the paper's 'direct C sim')."""
-    m, k = a.shape
-    _, n = b.shape
+    """Direct bit-manipulation GEMM oracle (the paper's 'direct C sim').
 
-    def chunk(acc, idx):
-        ac = jax.lax.dynamic_slice(a, (0, idx), (m, _K_CHUNK))
-        bc = jax.lax.dynamic_slice(b, (idx, 0), (_K_CHUNK, n))
-        prod = multiplier.jnp_mul(ac[:, :, None], bc[None, :, :])
-        return acc + jnp.sum(prod, axis=1, dtype=jnp.float32), None
-
-    if k % _K_CHUNK == 0 and k > _K_CHUNK:
-        acc = jnp.zeros((m, n), jnp.float32)
-        acc, _ = jax.lax.scan(
-            chunk, acc, jnp.arange(0, k, _K_CHUNK, dtype=jnp.int32)
-        )
-        return acc
-    prod = multiplier.jnp_mul(a[:, :, None], b[None, :, :])
-    return jnp.sum(prod, axis=1, dtype=jnp.float32)
+    Batched like ``ref_amsim_gemm``: (..., m, k) @ (..., k, n).
+    """
+    return _elementwise_gemm(a, b, multiplier.jnp_mul)
 
 
 # --------------------------------------------------------------- conv oracle

@@ -4,7 +4,11 @@ Score and value matmuls route through ``policy.einsum`` (the paper's
 observation that MultiHeadAttention "involves matrix multiplication under
 the hood" — Table I); QKV/O projections route through ``policy.matmul``.
 The grouped-query einsum keeps the KV-head axis as a batch axis so KV is
-never materialised at full head count.
+never materialised at full head count.  In the amsim modes those einsums
+rewrite to a (B*KV)-batched contraction that lowers to the single
+4-D-grid ``approx_gemm_batched`` Pallas kernel (kernels/approx_gemm.py)
+— one launch per score/value contraction with the LUT broadcast across
+the batch grid axis, instead of the former lax.map over 2-D GEMMs.
 
 Long sequences are processed in q-chunks (scan) so the score matrix never
 exceeds (B, KV, G, q_chunk, T) — the memory-side requirement for the

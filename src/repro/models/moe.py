@@ -4,8 +4,11 @@ Index-based dispatch (scatter to per-expert slot buffers) rather than the
 one-hot einsum of Switch-Transformer: memory is O(assignments x d), not
 O(tokens x experts x capacity).  The (E, C, d) buffers shard over the
 "model" axis on E (expert parallelism) and the token axis of the router
-over "data"; expert GEMMs are policy-routed batched matmuls, so the
-paper's approximate numerics apply inside every expert.
+over "data"; expert GEMMs are policy-routed batched matmuls — in amsim
+mode the whole (E, C, d) @ (E, d, d_ff) stack is one E-batched
+``approx_gemm_batched`` launch (LUT broadcast over experts), so the
+paper's approximate numerics apply inside every expert at full-batch
+kernel efficiency.
 
 Tokens overflowing an expert's capacity are dropped (scatter mode=drop),
 standard capacity-factor semantics.  An auxiliary load-balance loss

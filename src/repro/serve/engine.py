@@ -3,6 +3,14 @@
 ``make_serve_step`` builds the jit-able one-token decode step the
 ``decode_32k`` / ``long_500k`` dry-run cells lower; ``ServingEngine``
 drives batched greedy generation on top of it (examples/serve_lm.py).
+
+Every contraction in both prefill and decode routes through the policy's
+batched approximate-GEMM engine (kernels/ops.py): attention score/value
+einsums and MoE expert stacks lower to the single 4-D-grid Pallas kernel
+in ``amsim`` mode rather than per-example maps, so serving under an
+approximate multiplier pays one kernel launch per contraction per step.
+KV caches are donated to the decode step off-CPU, making the ring-buffer
+update in-place instead of a copy per generated token.
 """
 from __future__ import annotations
 
@@ -44,11 +52,23 @@ class ServingEngine:
                  params, max_len: int = 512):
         self.cfg, self.policy, self.params = cfg, policy, params
         self.max_len = max_len
-        self.prefill = jax.jit(make_prefill(cfg, policy, max_len))
-        self.step = jax.jit(make_serve_step(cfg, policy))
+        # Donate the cache argument so the per-token ring-buffer write is
+        # in-place.  CPU ignores donation with a warning, so gate on
+        # backend rather than donating unconditionally.
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        self.prefill = jax.jit(make_prefill(cfg, policy, max_len),
+                               donate_argnums=donate)
+        self.step = jax.jit(make_serve_step(cfg, policy),
+                            donate_argnums=donate)
 
     def generate(self, prompts, max_new_tokens: int = 32):
-        """prompts: int32 (B, S) -> int32 (B, max_new_tokens)."""
+        """prompts: int32 (B, S) -> int32 (B, max_new_tokens).
+
+        Greedy decode: token i is the argmax over the logits at position
+        len(prompt) + i - 1, exactly the sequence a full-prefill argmax
+        recomputation would produce (asserted in tests/test_serve.py for
+        both native and amsim numerics).
+        """
         B = prompts.shape[0]
         caches = init_lm_caches(self.cfg, B, self.max_len)
         nxt, caches = self.prefill(self.params, prompts, caches)

@@ -1,8 +1,21 @@
 # NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device.
 # Multi-device tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves.
+import os
+
 import numpy as np
 import pytest
+
+# XLA compile time dominates tier-1 (the payloads are tiny); the
+# persistent compilation cache makes warm reruns ~2x faster and costs a
+# cold run almost nothing.  Opt out with REPRO_NO_JAX_CACHE=1.
+if not os.environ.get("REPRO_NO_JAX_CACHE"):
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir",
+                      os.environ.get("JAX_COMPILATION_CACHE_DIR",
+                                     "/tmp/repro_jax_cache"))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
 
 
 @pytest.fixture

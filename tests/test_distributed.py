@@ -65,6 +65,7 @@ def test_param_pspecs_divisibility_all_archs():
     assert "OK" in run_in_subprocess(code)
 
 
+@pytest.mark.slow
 def test_dp_tp_training_matches_single_device():
     """Loss and gradients on a 2x2 (data, model) mesh must match the
     single-device values: the distribution layer cannot change numerics.
@@ -112,6 +113,7 @@ def test_dp_tp_training_matches_single_device():
     assert "OK" in run_in_subprocess(code)
 
 
+@pytest.mark.slow
 def test_compressed_psum_error_feedback():
     """int8+EF all-reduce: per-step error bounded; mean over repeated
     steps converges to the true mean (EF kills the bias)."""

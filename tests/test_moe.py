@@ -1,6 +1,8 @@
 """MoE dispatch invariants (property-style)."""
 import dataclasses
 
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -45,6 +47,7 @@ def test_moe_matches_manual_expert_combination():
                                np.asarray(want), rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_are_bounded():
     """With capacity_factor=1.0, each expert processes <= C tokens and the
     output stays finite (dropped tokens pass through with 0 contribution)."""
@@ -57,6 +60,7 @@ def test_moe_capacity_drops_are_bounded():
     assert float(aux) > 0
 
 
+@pytest.mark.slow
 def test_moe_aux_loss_balanced_router_is_one():
     """Perfectly uniform router -> Switch aux loss ~= 1."""
     cfg = _cfg()

@@ -5,7 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests run when hypothesis is installed (requirements-dev);
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # the deterministic twin below covers the law
+    HAVE_HYPOTHESIS = False
 
 from repro.core.policy import NumericsPolicy
 from repro.kernels.ops import approx_conv2d, policy_einsum, policy_matmul
@@ -69,15 +74,21 @@ def test_approx_backward_flag(rng):
 
 EINSUM_CASES = [
     ("bqhd,bkhd->bhqk", (2, 7, 3, 8), (2, 9, 3, 8)),
-    ("bhqk,bkhd->bqhd", (2, 3, 7, 9), (2, 9, 3, 8)),
     ("bqkgd,btkd->bkgqt", (2, 5, 2, 3, 8), (2, 6, 2, 8)),
-    ("bcln,bcsn->bcls", (2, 3, 4, 8), (2, 3, 5, 8)),
     ("bcsn,bcshp->bchpn", (2, 3, 4, 8), (2, 3, 4, 2, 6)),
     ("ecd,edf->ecf", (4, 5, 8), (4, 8, 6)),
 ]
+# slow tier re-adds the remaining attention/SSD specs
+EINSUM_CASES_SLOW = [
+    ("bhqk,bkhd->bqhd", (2, 3, 7, 9), (2, 9, 3, 8)),
+    ("bcln,bcsn->bcls", (2, 3, 4, 8), (2, 3, 5, 8)),
+]
 
 
-@pytest.mark.parametrize("spec,sa,sb", EINSUM_CASES)
+@pytest.mark.parametrize(
+    "spec,sa,sb",
+    EINSUM_CASES + [pytest.param(*c, marks=pytest.mark.slow)
+                    for c in EINSUM_CASES_SLOW])
 def test_policy_einsum_matches_jnp(spec, sa, sb, rng):
     a = jnp.asarray(rng.standard_normal(sa), jnp.float32)
     b = jnp.asarray(rng.standard_normal(sb), jnp.float32)
@@ -97,10 +108,7 @@ def test_policy_einsum_matches_jnp(spec, sa, sb, rng):
     ok(g1[0], g2[0]); ok(g1[1], g2[1])
 
 
-@given(st.integers(1, 3), st.integers(1, 16), st.integers(1, 16),
-       st.integers(1, 16))
-@settings(max_examples=25, deadline=None)
-def test_matmul_shape_property(batch, m, k, n):
+def _check_matmul_shape(batch, m, k, n):
     """(B, m, k) @ (k, n) keeps shape contract for every mode."""
     key = jax.random.PRNGKey(batch * 1000 + m * 100 + k * 10 + n)
     a = jax.random.normal(key, (batch, m, k), jnp.float32)
@@ -109,6 +117,21 @@ def test_matmul_shape_property(batch, m, k, n):
         out = policy_matmul(a, w, pol)
         assert out.shape == (batch, m, n)
         assert bool(jnp.all(jnp.isfinite(out)))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(1, 3), st.integers(1, 16), st.integers(1, 16),
+           st.integers(1, 16))
+    @settings(max_examples=25, deadline=None)
+    def test_matmul_shape_property(batch, m, k, n):
+        _check_matmul_shape(batch, m, k, n)
+
+
+@pytest.mark.parametrize("batch,m,k,n", [
+    (2, 3, 5, 4), (3, 13, 7, 2),
+])
+def test_matmul_shape_deterministic(batch, m, k, n):
+    _check_matmul_shape(batch, m, k, n)
 
 
 @pytest.mark.parametrize("stride", [1, 2])

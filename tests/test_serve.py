@@ -1,0 +1,60 @@
+"""ServingEngine.generate: greedy decode through the batched engine must
+match token-for-token a full-prefill argmax recomputation (no KV cache),
+under native and approximate numerics alike."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.policy import NumericsPolicy
+from repro.models.transformer import init_lm, lm_forward
+from repro.serve.engine import ServingEngine
+
+POLICIES = {
+    "native": NumericsPolicy(),
+    "amsim_jnp": NumericsPolicy(mode="amsim_jnp", multiplier="afm16"),
+}
+
+# Oracle logits per policy, collected by the parametrised test below so the
+# cross-policy "numerics actually differ" assertion reuses them for free.
+_ORACLE_LOGITS: dict[str, np.ndarray] = {}
+
+
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+def test_generate_matches_full_prefill_argmax(policy_name):
+    policy = POLICIES[policy_name]
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    key = jax.random.PRNGKey(7)
+    params = init_lm(key, cfg)
+    prompts = jax.random.randint(key, (2, 5), 0, cfg.vocab, jnp.int32)
+    T = 4
+    engine = ServingEngine(cfg, policy, params, max_len=16)
+    out = engine.generate(prompts, max_new_tokens=T)
+    assert out.shape == (2, T)
+
+    # Oracle: one full (uncached) prefill over prompt + generated[:-1].
+    # Causal attention means logits at position len(prompt)-1+i equal the
+    # i-step "recompute the whole prefix" logits, so comparing every
+    # position is exactly the token-for-token argmax recomputation.
+    full = jnp.concatenate([prompts, out[:, :-1]], axis=1)
+    fwd = jax.jit(lambda p, t: lm_forward(p, t, cfg, policy)[0])
+    logits = fwd(params, full)
+    pred = jnp.argmax(logits[:, prompts.shape[1] - 1:], axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(pred),
+        err_msg=f"greedy decode diverged under {policy_name}")
+    _ORACLE_LOGITS[policy_name] = np.asarray(logits)
+
+
+def test_generate_policies_actually_differ():
+    """Sanity: the two policies drove the engine through different logits
+    (otherwise the parametrised test above proves less than it claims).
+    Note: greedy prefixes can diverge between policies, making the oracle
+    inputs differ — that still witnesses differing numerics; identical
+    logits on identical inputs is what this guards against."""
+    if set(_ORACLE_LOGITS) != set(POLICIES):  # deselected / sharded run
+        pytest.skip("needs both test_generate_matches_full_prefill_argmax "
+                    "parametrisations in this session")
+    a, b = _ORACLE_LOGITS["native"], _ORACLE_LOGITS["amsim_jnp"]
+    assert a.shape != b.shape or float(np.max(np.abs(a - b))) > 0

@@ -154,6 +154,7 @@ def test_vision_dataset_learnable_and_deterministic():
 
 
 # ------------------------------------------------------------------ serving
+@pytest.mark.slow  # tier-1 runs the stronger token-for-token tests/test_serve.py
 def test_serving_engine_greedy_matches_full_forward():
     from repro.models.transformer import lm_forward
     cfg = reduced(get_arch("granite-3-2b"), n_layers=2)
