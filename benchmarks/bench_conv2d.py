@@ -1,0 +1,144 @@
+"""Conv2d lowering throughput: fused implicit-GEMM vs im2col+GEMM vs direct.
+
+Per shape, times forward conv under four lowerings:
+
+  native        lax.conv_general_dilated, exact f32        — "TFnG" floor
+  fused         ``approx_conv2d_fused`` implicit-GEMM Pallas kernel
+                (AMCONV2D analogue; packed LUT, conv autotune namespace)
+  im2col_gemm   materialised ``ref_im2col`` + Pallas approx-GEMM — the
+                pre-fused lowering this PR replaces
+  direct        pure-jnp bit-manipulation sim through im2col (the
+                paper's "direct C sim" baseline; full runs only)
+
+plus one fused training step (fwd + dx + dw through the fused VJP).
+
+Shapes are the paper's evaluation targets: LeNet-5 conv layers and a
+CIFAR ResNet block.  The acceptance metric is
+``fused_vs_im2col_speedup_resnet-block`` >= 1.3.
+
+CSV columns (benchmarks/common.emit): name,us_per_call,derived.
+
+Flags:
+  --smoke      ResNet-block shape only, no direct sim, best-of-5 timing
+               (feeds the CI bench-regression gate)
+  --autotune   sweep the conv autotuner per shape first (writes the
+               JSON block-size cache)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from functools import partial
+
+from benchmarks.common import emit, time_fn
+from repro.core.lutgen import get_lut, get_packed_lut
+from repro.core.multipliers import get_multiplier
+from repro.core.policy import NumericsPolicy
+from repro.kernels import autotune
+from repro.kernels.approx_conv import approx_conv2d_fused
+from repro.kernels.ops import approx_conv2d, conv2d_im2col
+from repro.kernels.ref import ref_conv2d
+
+# Best-of-N timing: the least-interference estimator, so the gated
+# fused-vs-im2col ratio is reproducible across CI runs.
+time_fn_best = partial(time_fn, best=True)
+
+#         tag             N   H   W   C   O  k  stride
+SHAPES = [
+    ("lenet5-c1",         8, 28, 28,  1,  6, 5, 1),
+    ("lenet5-c2",         8, 14, 14,  6, 16, 5, 1),
+    ("resnet-block",      8, 32, 32, 64, 64, 3, 1),   # acceptance shape
+    ("resnet-downsample", 8, 32, 32, 64, 64, 3, 2),
+]
+SMOKE_SHAPES = [SHAPES[2]]
+
+
+def bench_shape(tag, N, H, W, C, O, k, stride, *, mult, lut, plut, iters,
+                smoke, do_autotune):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((N, H, W, C)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, C, O)), jnp.float32)
+    M = mult.mantissa_bits
+    klut = plut if plut is not None else lut
+    flops = 2.0 * N * -(-H // stride) * -(-W // stride) * k * k * C * O
+
+    def gflops(t):
+        return f"{flops / t / 1e9:.2f}GFLOP/s"
+
+    if do_autotune:
+        won = autotune.autotune_conv(x, w, klut, M, stride=stride,
+                                     padding="SAME", iters=max(1, iters - 1))
+        emit(f"autotune_conv_{tag}", 0.0,
+             f"br{won.br}_bo{won.bo}_c{won.chunk}_dwc{won.dw_chunk}")
+
+    native = jax.jit(lambda x, w: ref_conv2d(x, w, stride, "SAME"))
+    t_native = time_fn_best(native, x, w, iters=iters)
+    emit(f"native_conv_{tag}", t_native, gflops(t_native))
+
+    fused = jax.jit(lambda x, w: approx_conv2d_fused(
+        x, w, klut, M, stride=stride, padding="SAME"))
+    t_fused = time_fn_best(fused, x, w, iters=iters)
+    emit(f"fused_conv_{tag}", t_fused,
+         f"{gflops(t_fused)}_x{t_fused / t_native:.1f}_vs_native",
+         norm=t_fused / t_native)
+
+    sim = NumericsPolicy(mode="amsim", multiplier=mult.name)
+    im2col = jax.jit(lambda x, w: conv2d_im2col(x, w, stride, "SAME", sim))
+    t_im2 = time_fn_best(im2col, x, w, iters=iters)
+    emit(f"im2col_gemm_conv_{tag}", t_im2,
+         f"{gflops(t_im2)}_x{t_im2 / t_native:.1f}_vs_native",
+         norm=t_im2 / t_native)
+
+    emit(f"fused_vs_im2col_speedup_{tag}", 0.0,
+         f"{t_im2 / t_fused:.2f}x_fused_over_im2col",
+         norm=t_fused / t_im2, gate=True)
+
+    if not smoke:
+        direct = NumericsPolicy(mode="direct", multiplier=mult.name)
+        dsim = jax.jit(lambda x, w: conv2d_im2col(x, w, stride, "SAME",
+                                                  direct))
+        t_dir = time_fn_best(dsim, x, w, iters=iters)
+        emit(f"direct_conv_{tag}", t_dir,
+             f"{gflops(t_dir)}_x{t_dir / t_native:.1f}_vs_native",
+             norm=t_dir / t_native)
+
+        # One fused training step: fwd + both gradients through the VJP.
+        step = jax.jit(jax.grad(lambda w, x: jnp.sum(
+            approx_conv2d(x, w, stride, "SAME", sim) ** 2)))
+        t_step = time_fn_best(step, w, x, iters=iters)
+        emit(f"fused_train_step_{tag}", t_step, gflops(t_step))
+
+    return t_fused, t_im2
+
+
+def main(smoke: bool = False, do_autotune: bool = False) -> None:
+    mult = get_multiplier("afm16")
+    lut = jnp.asarray(get_lut(mult))
+    packed = get_packed_lut(mult)
+    plut = jnp.asarray(packed) if packed is not None else None
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    iters = 5 if smoke else 3  # smoke feeds the CI gate: best-of-5
+    for tag, N, H, W, C, O, k, stride in shapes:
+        bench_shape(tag, N, H, W, C, O, k, stride, mult=mult, lut=lut,
+                    plut=plut, iters=iters, smoke=smoke,
+                    do_autotune=do_autotune)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="ResNet-block shape only, best-of-5 timing (CI)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the conv block-size sweep per shape first")
+    args = ap.parse_args()
+    main(smoke=args.smoke, do_autotune=args.autotune)

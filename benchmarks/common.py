@@ -1,13 +1,38 @@
-"""Shared benchmark helpers: timing, CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, metrics registry.
+
+Every ``emit`` call both prints the CSV row (the historical interface)
+and records the metric in an in-process registry, so drivers
+(``benchmarks/run.py --json``) can dump one machine-readable JSON blob
+for the CI bench-regression gate (``benchmarks/compare_bench.py``).
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 
+# name -> {"us": float, "derived": str, "norm": float | None,
+# "gate": bool}.  ``norm`` is a machine-relative ratio (e.g. kernel time
+# / reference-kernel time for the same shape): the regression gate
+# prefers it because absolute wall times on shared CI runners are far
+# noisier than on-box ratios.  Only rows with ``gate`` True can FAIL the
+# gate (kernel-vs-kernel ratios where runner speed cancels); the rest
+# are compared and reported as informational.
+METRICS: dict[str, dict] = {}
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds per call (block_until_ready)."""
+METRICS_SCHEMA = 1
+
+
+def reset_metrics() -> None:
+    METRICS.clear()
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3,
+            best: bool = False) -> float:
+    """Wall seconds per call (block_until_ready): median, or with
+    ``best=True`` the minimum — the least-interference estimator, which
+    keeps gated kernel-vs-kernel ratios reproducible on noisy runners."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -16,8 +41,19 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     ts.sort()
-    return ts[len(ts) // 2]
+    return ts[0] if best else ts[len(ts) // 2]
 
 
-def emit(name: str, seconds: float, derived: str = ""):
+def emit(name: str, seconds: float, derived: str = "",
+         norm: float | None = None, gate: bool = False):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    METRICS[name] = {"us": round(seconds * 1e6, 1), "derived": derived,
+                     "norm": None if norm is None else round(norm, 4),
+                     "gate": gate}
+
+
+def dump_metrics(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump({"schema": METRICS_SCHEMA, "metrics": METRICS}, f,
+                  indent=1, sort_keys=True)
+        f.write("\n")

@@ -1,0 +1,100 @@
+"""CI bench-regression gate: compare two metrics JSONs from run.py --json.
+
+Usage:
+    python benchmarks/compare_bench.py BENCH_baseline.json BENCH_pr.json \
+        [--threshold 0.15]
+
+For every metric present in both files the script computes a slowdown
+ratio (pr / baseline) and fails (exit 1) if a **gated** metric exceeds
+1 + threshold.  Gated metrics (``"gate": true``, set at emit time) are
+the kernel-vs-kernel ratios — e.g. fused-conv time / im2col-GEMM time
+on the same box — where runner speed cancels; absolute wall times vary
+~2x across shared CI runners and are therefore compared and reported
+but never fail the gate.
+
+Which number is compared:
+  * ``norm`` (machine-relative ratio) when both runs recorded it;
+  * raw ``us`` otherwise, but only for timing rows (us > 0) — informative
+    rows like convergence curves carry us == 0 and are skipped.
+
+Metrics present in only one file are reported but never fail the gate
+(renames/additions shouldn't brick CI); having no comparable gated
+metric fails, because then the gate is vacuous.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        raw = json.load(f)
+    if not isinstance(raw, dict) or "metrics" not in raw:
+        raise SystemExit(f"{path}: not a run.py --json metrics file")
+    return raw["metrics"]
+
+
+def compare(base: dict, pr: dict, threshold: float):
+    """Yield (name, kind, ratio, gated, ok) per comparable metric."""
+    for name in sorted(set(base) & set(pr)):
+        b, p = base[name], pr[name]
+        gated = bool(b.get("gate")) and bool(p.get("gate"))
+        if b.get("norm") is not None and p.get("norm") is not None:
+            if b["norm"] <= 0:
+                continue
+            ratio = p["norm"] / b["norm"]
+            yield name, "norm", ratio, gated, ratio <= 1 + threshold
+        elif b.get("us", 0) > 0 and p.get("us", 0) > 0:
+            ratio = p["us"] / b["us"]
+            yield name, "us", ratio, gated, ratio <= 1 + threshold
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("pr")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated slowdown fraction (default 0.15)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    pr = load(args.pr)
+    rows = list(compare(base, pr, args.threshold))
+    only_base = sorted(set(base) - set(pr))
+    only_pr = sorted(set(pr) - set(base))
+
+    print(f"{'metric':52s} {'kind':5s} {'pr/base':>8s}  verdict")
+    failures = 0
+    gated_n = 0
+    for name, kind, ratio, gated, ok in rows:
+        gated_n += gated
+        if gated and not ok:
+            failures += 1
+            verdict = "REGRESSION"
+        elif not ok:
+            verdict = "slower (info-only)"
+        else:
+            verdict = "ok" if gated else "ok (info-only)"
+        print(f"{name:52s} {kind:5s} {ratio:8.3f}  {verdict}")
+    for name in only_base:
+        print(f"{name:52s} {'-':5s} {'-':>8s}  baseline-only (skipped)")
+    for name in only_pr:
+        print(f"{name:52s} {'-':5s} {'-':>8s}  pr-only (skipped)")
+
+    if not gated_n:
+        print("no comparable gated metrics between the two runs — gate "
+              "is vacuous, failing")
+        return 1
+    if failures:
+        print(f"\n{failures} gated metric(s) regressed beyond "
+              f"{args.threshold:.0%}")
+        return 1
+    print(f"\nall {gated_n} gated metrics within {args.threshold:.0%} "
+          f"({len(rows)} compared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,38 @@
 """Benchmark driver: one section per paper table/figure.
 
 CSV format: name,us_per_call,derived
+
+Flags:
+  --smoke       kernel-engine sections only (batched GEMM + fused conv)
+                at smoke size — the CI bench-regression workload
+  --json PATH   dump the metrics registry as JSON (consumed by
+                benchmarks/compare_bench.py)
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
 
 
-def main() -> None:
+def _sections(smoke: bool):
+    # Smoke (the CI gate) imports only the two engine benches; an
+    # import-time error in an unused full-run module must not brick it.
+    from benchmarks import bench_batched_gemm, bench_conv2d
+
+    if smoke:
+        return [
+            ("Batched approx-GEMM engine (smoke)",
+             lambda: bench_batched_gemm.main(smoke=True)),
+            ("Fused approx-conv2d engine (smoke)",
+             lambda: bench_conv2d.main(smoke=True)),
+        ]
     from benchmarks import (
-        bench_batched_gemm,
         bench_convergence,
         bench_crossformat,
         bench_gemm_sim,
@@ -20,9 +42,10 @@ def main() -> None:
         bench_train_time,
     )
 
-    sections = [
+    return [
         ("Fig.6 GEMM simulation perf", bench_gemm_sim.main),
         ("Batched approx-GEMM engine", bench_batched_gemm.main),
+        ("Fused approx-conv2d engine", bench_conv2d.main),
         ("Fig.10/Table III convergence & accuracy", bench_convergence.main),
         ("Table IV cross-format matrix", bench_crossformat.main),
         ("Fig.11 pruning x multipliers", bench_pruning.main),
@@ -30,17 +53,32 @@ def main() -> None:
         ("Table VI inference time", bench_infer_time.main),
         ("Roofline table (from dry-run)", bench_roofline.main),
     ]
+
+
+def main(smoke: bool = False, json_path: str | None = None) -> None:
+    from benchmarks import common
+
+    common.reset_metrics()
     failures = 0
-    for title, fn in sections:
+    for title, fn in _sections(smoke):
         print(f"\n# === {title} ===")
         try:
             fn()
         except Exception:
             failures += 1
             traceback.print_exc()
+    if json_path:
+        common.dump_metrics(json_path)
+        print(f"\n# wrote {len(common.METRICS)} metrics -> {json_path}")
     if failures:
         sys.exit(1)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="kernel-engine sections only, smoke sizes (CI)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump metrics registry as JSON")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json)

@@ -4,19 +4,49 @@ Reproduces the Fig. 10 protocol at CPU scale: same seed, four multipliers
 (FP32 / bfloat16 / AFM32 / AFM16), training curves + final test accuracy
 (Table III deltas).
 
-Run:  PYTHONPATH=src python examples/train_lenet_approx.py [--model lenet-5]
+``--mode`` selects the simulation lowering for the 16-bit multipliers:
+``auto`` keeps the benchmark defaults (portable ``amsim_jnp``), while
+``amsim`` routes every dense layer through the Pallas LUT-GEMM kernels
+and every conv layer — forward and both gradients — through the fused
+implicit-GEMM conv kernels (the AMCONV2D analogue).  AFM32 always uses
+direct bit-manipulation simulation: LUTs cap at M=12.
+
+Run:  PYTHONPATH=src python examples/train_lenet_approx.py \
+          [--model lenet-5] [--mode amsim]
 """
 import argparse
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
 
 from benchmarks.bench_convergence import MULTIPLIERS, train_one
 from repro.configs.paper_models import VISION_REGISTRY
+from repro.core.policy import NumericsPolicy
 from repro.data.pipeline import vision_dataset
+
+
+def build_policies(mode: str):
+    if mode == "auto":
+        return MULTIPLIERS
+    return {
+        "fp32": NumericsPolicy(),
+        "bf16": NumericsPolicy(mode=mode, multiplier="bf16"),
+        "afm32": NumericsPolicy(mode="direct", multiplier="afm32"),
+        "afm16": NumericsPolicy(mode=mode, multiplier="afm16"),
+    }
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="lenet-300-100",
                     choices=sorted(VISION_REGISTRY))
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "amsim", "amsim_jnp", "direct"],
+                    help="simulation lowering for the 16-bit multipliers "
+                         "(amsim = Pallas LUT kernels incl. fused conv)")
     ap.add_argument("--epochs", type=int, default=5)
     ap.add_argument("--n-train", type=int, default=2048)
     args = ap.parse_args()
@@ -24,9 +54,10 @@ def main():
     cfg = VISION_REGISTRY[args.model]
     data = vision_dataset(args.model, args.n_train, 512, cfg.input_hw,
                           cfg.input_ch, cfg.n_classes)
-    print(f"{args.model}: {args.epochs} epochs x {args.n_train} samples")
+    print(f"{args.model}: {args.epochs} epochs x {args.n_train} samples "
+          f"(mode={args.mode})")
     results = {}
-    for name, pol in MULTIPLIERS.items():
+    for name, pol in build_policies(args.mode).items():
         curve, acc, _ = train_one(cfg, pol, data, epochs=args.epochs)
         results[name] = (curve, acc)
         print(f"  {name:6s} train-acc curve: "

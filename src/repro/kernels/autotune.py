@@ -1,4 +1,4 @@
-"""Block-size autotuner for the approximate-GEMM kernels.
+"""Block-size autotuner for the approximate-GEMM and conv kernels.
 
 The paper's CUDA GEMM hard-codes 16x16 shared-memory tiles; on TPU (and in
 interpret mode on CPU) the right (bm, bn, bk, chunk) depends on the shape,
@@ -7,12 +7,16 @@ the real kernel and caches the winner in a JSON file on disk, keyed by
 
     <backend>|<kind>|<shape bucket>|M<M>
 
-where *kind* is ``gemm2d`` / ``gemm3d`` and the shape bucket rounds every
-dimension up to a power of two (so one sweep covers a family of nearby
-shapes).  ``approx_gemm`` / ``approx_gemm_batched`` consult the cache at
-trace time via :func:`get_block_config`; a miss falls back to safe
-defaults — tuning itself only runs when :func:`autotune` is called
-explicitly (benchmarks/bench_batched_gemm.py --autotune).
+where *kind* is ``gemm2d`` / ``gemm3d`` / ``conv2d``.  The GEMM bucket
+rounds every dimension up to a power of two (so one sweep covers a family
+of nearby shapes); the conv bucket keeps H/W/KHxKW/stride/padding exact
+(they fix the in-kernel slicing structure) and pow2-buckets N/C/O.
+``approx_gemm`` / ``approx_gemm_batched`` / ``approx_conv2d_fused``
+consult the cache at trace time via :func:`get_block_config` /
+:func:`get_conv_config`; a miss falls back to safe defaults — tuning
+itself only runs when :func:`autotune` / :func:`autotune_conv` is called
+explicitly (``benchmarks/bench_batched_gemm.py --autotune``,
+``benchmarks/bench_conv2d.py --autotune``).
 
 Cache file schema (``REPRO_AUTOTUNE_CACHE``, default
 ``/tmp/repro_autotune/gemm_blocks.json``)::
@@ -22,6 +26,9 @@ Cache file schema (``REPRO_AUTOTUNE_CACHE``, default
       "entries": {
         "cpu|gemm3d|b8_m256_k256_n256|M7": {
           "bm": 128, "bn": 128, "bk": 256, "chunk": 64, "us": 1234.5
+        },
+        "cpu|conv2d|n8_h32_w32_c64_k3x3_o64_s1_pSAME|M7": {
+          "br": 8, "bo": 64, "chunk": 64, "dw_chunk": 128, "us": 9876.5
         }
       }
     }
@@ -57,12 +64,31 @@ class BlockConfig:
         return (self.bm, self.bn, self.bk, self.chunk)
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvBlockConfig:
+    """One fused-conv tiling: ``br`` output rows x ``bo`` out-channels
+    per grid point, ``chunk`` input-channel gather brick (forward) and
+    ``dw_chunk`` patch-axis gather brick (weight gradient)."""
+
+    br: int = 8
+    bo: int = 128
+    chunk: int = 64
+    dw_chunk: int = 128
+
+    def astuple(self):
+        return (self.br, self.bo, self.chunk, self.dw_chunk)
+
+
 # Fallbacks when no tuned entry exists.  The batched kernel defaults to a
 # deeper k-tile / wider gather brick: one grid point per (batch, m, n) tile
 # amortises kernel-dispatch overhead that the vmapped 2-D path pays per
 # k-block (interpret mode) and keeps the accumulator resident longer (TPU).
 DEFAULT_2D = BlockConfig(128, 128, 128, 8)
 DEFAULT_BATCHED = BlockConfig(128, 128, 256, 64)
+# Conv default: whole output-channel extent per block (``bo`` is clamped
+# to O by the wrapper, avoiding the lane padding the GEMM path pays when
+# O < 128) and a full-C gather brick for the paper's C <= 128 layers.
+DEFAULT_CONV = ConvBlockConfig(8, 128, 64, 128)
 
 CANDIDATES_2D = [
     BlockConfig(128, 128, 128, 8),
@@ -78,8 +104,15 @@ CANDIDATES_BATCHED = [
     BlockConfig(128, 128, 512, 64),
     BlockConfig(256, 128, 256, 32),
 ]
+CANDIDATES_CONV = [
+    ConvBlockConfig(4, 128, 64, 128),
+    ConvBlockConfig(8, 128, 64, 128),
+    ConvBlockConfig(8, 128, 32, 64),
+    ConvBlockConfig(16, 128, 64, 256),
+    ConvBlockConfig(8, 64, 64, 128),
+]
 
-_MEM: dict[str, BlockConfig] | None = None  # in-process mirror of the file
+_MEM: dict[str, BlockConfig | ConvBlockConfig] | None = None  # file mirror
 
 
 # ------------------------------------------------------------------ cache IO
@@ -88,7 +121,21 @@ def cache_path() -> Path:
         "REPRO_AUTOTUNE_CACHE", "/tmp/repro_autotune/gemm_blocks.json"))
 
 
-def _load_file() -> dict[str, BlockConfig]:
+def _parse_entry(e) -> BlockConfig | ConvBlockConfig | None:
+    """One cache entry -> config; None for nonsense (dropped silently)."""
+    try:
+        if "br" in e:
+            cfg = ConvBlockConfig(int(e["br"]), int(e["bo"]),
+                                  int(e["chunk"]), int(e["dw_chunk"]))
+        else:
+            cfg = BlockConfig(int(e["bm"]), int(e["bn"]),
+                              int(e["bk"]), int(e["chunk"]))
+    except (KeyError, TypeError, ValueError):
+        return None
+    return cfg if all(v > 0 for v in cfg.astuple()) else None
+
+
+def _load_file() -> dict[str, BlockConfig | ConvBlockConfig]:
     """Parse the on-disk cache; any corruption degrades to an empty cache."""
     try:
         with open(cache_path()) as f:
@@ -97,9 +144,8 @@ def _load_file() -> dict[str, BlockConfig]:
             return {}
         out = {}
         for key, e in raw.get("entries", {}).items():
-            cfg = BlockConfig(int(e["bm"]), int(e["bn"]),
-                              int(e["bk"]), int(e["chunk"]))
-            if all(v > 0 for v in cfg.astuple()):  # drop nonsense entries
+            cfg = _parse_entry(e)
+            if cfg is not None:
                 out[key] = cfg
         return out
     except (OSError, ValueError, KeyError, TypeError):
@@ -119,7 +165,8 @@ def reload_cache() -> None:
     _MEM = None
 
 
-def _save_entry(key: str, cfg: BlockConfig, us: float) -> None:
+def _save_entry(key: str, cfg: BlockConfig | ConvBlockConfig,
+                us: float) -> None:
     path = cache_path()
     path.parent.mkdir(parents=True, exist_ok=True)
     try:
@@ -130,8 +177,7 @@ def _save_entry(key: str, cfg: BlockConfig, us: float) -> None:
             raw = {"version": SCHEMA_VERSION, "entries": {}}
     except (OSError, ValueError):
         raw = {"version": SCHEMA_VERSION, "entries": {}}
-    raw["entries"][key] = {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk,
-                           "chunk": cfg.chunk, "us": round(us, 1)}
+    raw["entries"][key] = dict(dataclasses.asdict(cfg), us=round(us, 1))
     tmp = path.with_suffix(".tmp")
     tmp.write_text(json.dumps(raw, indent=1, sort_keys=True))
     os.replace(tmp, path)  # atomic publish (mirrors lutgen's LUT cache)
@@ -158,14 +204,45 @@ def cache_key(kind: str, m: int, k: int, n: int, M: int,
     return f"{backend}|{kind}|{shape_bucket(m, k, n, batch)}|M{M}"
 
 
+def _pad_tag(padding) -> str:
+    if isinstance(padding, str):
+        return padding.upper()
+    return "p" + ".".join(str(int(p)) for p in padding)
+
+
+def conv_shape_bucket(n: int, h: int, w: int, c: int, kh: int, kw: int,
+                      o: int, stride: int, padding) -> str:
+    """H/W/K/stride/padding exact (they fix the in-kernel slicing
+    structure); N/C/O pow2-bucketed like the GEMM dims."""
+    return (f"n{_pow2_ceil(n)}_h{h}_w{w}_c{_pow2_ceil(c)}"
+            f"_k{kh}x{kw}_o{_pow2_ceil(o)}_s{stride}_{_pad_tag(padding)}")
+
+
+def conv_cache_key(n: int, h: int, w: int, c: int, kh: int, kw: int,
+                   o: int, stride: int, padding, M: int,
+                   backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    bucket = conv_shape_bucket(n, h, w, c, kh, kw, o, stride, padding)
+    return f"{backend}|conv2d|{bucket}|M{M}"
+
+
 # ------------------------------------------------------------------ lookup
 def get_block_config(kind: str, m: int, k: int, n: int, M: int,
                      batch: int = 0, backend: str | None = None) -> BlockConfig:
     """Tuned winner for this bucket, or the kind's default on a miss."""
     hit = _entries().get(cache_key(kind, m, k, n, M, batch, backend))
-    if hit is not None:
+    if isinstance(hit, BlockConfig):
         return hit
     return DEFAULT_BATCHED if kind == "gemm3d" else DEFAULT_2D
+
+
+def get_conv_config(n: int, h: int, w: int, c: int, kh: int, kw: int,
+                    o: int, stride: int, padding, M: int,
+                    backend: str | None = None) -> ConvBlockConfig:
+    """Tuned fused-conv tiling for this bucket, or DEFAULT_CONV."""
+    hit = _entries().get(
+        conv_cache_key(n, h, w, c, kh, kw, o, stride, padding, M, backend))
+    return hit if isinstance(hit, ConvBlockConfig) else DEFAULT_CONV
 
 
 # ------------------------------------------------------------------ tuning
@@ -221,4 +298,44 @@ def autotune(kind: str, a, b, lut, M: int, *, candidates=None,
         return DEFAULT_BATCHED if batched else DEFAULT_2D
     if save:
         _save_entry(cache_key(kind, m, k, n, M, B), best, best_t * 1e6)
+    return best
+
+
+def autotune_conv(x, w, lut, M: int, *, stride: int = 1, padding="SAME",
+                  candidates=None, interpret: bool | None = None,
+                  iters: int = 2, save: bool = True) -> ConvBlockConfig:
+    """Sweep fused-conv tilings (forward + weight-gradient timed
+    together, since one cache entry serves both); cache + return the
+    winner.  Candidates that fail to lower are skipped; if every
+    candidate fails DEFAULT_CONV is returned untouched.
+    """
+    from repro.kernels.approx_conv import (approx_conv2d_dw,
+                                           approx_conv2d_fused)
+
+    if candidates is None:
+        candidates = CANDIDATES_CONV
+    n, h, wid, c = x.shape
+    kh, kw, _, o = w.shape
+
+    def run(cfg):
+        out = approx_conv2d_fused(x, w, lut, M, stride=stride,
+                                  padding=padding, br=cfg.br, bo=cfg.bo,
+                                  chunk=cfg.chunk, interpret=interpret)
+        return approx_conv2d_dw(x, out, lut, M, kh=kh, kw=kw, stride=stride,
+                                padding=padding, chunk=cfg.dw_chunk,
+                                interpret=interpret)
+
+    best, best_t = None, float("inf")
+    for cfg in candidates:
+        try:
+            t = _time_call(lambda: run(cfg), iters=iters)
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = cfg, t
+    if best is None:
+        return DEFAULT_CONV
+    if save:
+        _save_entry(conv_cache_key(n, h, wid, c, kh, kw, o, stride,
+                                   padding, M), best, best_t * 1e6)
     return best

@@ -24,6 +24,7 @@ Accumulation is always f32 (paper §VII).
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 
 import jax
@@ -34,6 +35,8 @@ from repro.core.float_bits import jnp_truncate_mantissa, jnp_round_mantissa
 from repro.core.lutgen import get_lut, get_packed_lut
 from repro.core.multipliers import get_multiplier
 from repro.core.policy import NumericsPolicy
+from repro.kernels.approx_conv import (approx_conv2d_dw, approx_conv2d_fused,
+                                       conv_pads, fused_supported)
 from repro.kernels.approx_gemm import approx_gemm, approx_gemm_batched
 from repro.kernels.ref import ref_amsim_gemm, ref_direct_gemm, ref_im2col
 
@@ -242,21 +245,34 @@ def policy_einsum(spec: str, a, b, policy: NumericsPolicy):
 
 
 # =====================================================================
-# Conv2D (paper §VI-B: IM2COL + GEMM, fwd + both bwd gradients)
+# Conv2D (paper §VI: AMCONV2D — fwd + both bwd gradients)
+#
+# Two lowerings:
+#   * fused implicit-GEMM Pallas kernels (kernels/approx_conv.py) when
+#     policy.mode == "amsim" and the shape fits the kernel's VMEM/unroll
+#     guards — the paper's AMCONV2D without materialising im2col;
+#   * materialised im2col + policy GEMM otherwise (also the amsim_jnp /
+#     direct reference lowering the fused kernels are tested against).
 # =====================================================================
 
-def _conv_pads(h, w, kh, kw, stride, padding):
-    if padding == "VALID":
-        return (0, 0, 0, 0)
-    oh = -(-h // stride)
-    ow = -(-w // stride)
-    ph = max((oh - 1) * stride + kh - h, 0)
-    pw = max((ow - 1) * stride + kw - w, 0)
-    return (ph // 2, ph - ph // 2, pw // 2, pw - pw // 2)
+# _conv_pads is intentionally lax.padtype_to_pads-backed (see
+# kernels/approx_conv.py) so SAME pads for even kernel sizes keep the
+# asymmetric low=floor / high=remainder split of conv_general_dilated.
+_conv_pads = conv_pads
 
 
-def _conv_fwd_impl(x, w, stride, padding, policy):
-    """x (N,H,W,C), w (KH,KW,C,O) -> (N,OH,OW,O) via im2col+GEMM."""
+def _conv_use_fused(x_shape, w_shape, stride, policy) -> bool:
+    if policy.mode != "amsim" or policy.is_native:
+        return False
+    if os.environ.get("REPRO_CONV_FUSED", "1").lower() in ("0", "false"):
+        return False
+    return fused_supported(x_shape, w_shape, stride)
+
+
+def conv2d_im2col(x, w, stride, padding, policy):
+    """x (N,H,W,C), w (KH,KW,C,O) -> (N,OH,OW,O) via materialised
+    im2col + policy GEMM (the pre-fused lowering; kept as reference and
+    fallback, and benchmarked against the fused kernel)."""
     n, h, wid, c = x.shape
     kh, kw, _, o = w.shape
     pad = _conv_pads(h, wid, kh, kw, stride, padding)
@@ -265,6 +281,15 @@ def _conv_fwd_impl(x, w, stride, padding, policy):
     oh = (h + pad[0] + pad[1] - kh) // stride + 1
     ow = (wid + pad[2] + pad[3] - kw) // stride + 1
     return out.reshape(n, oh, ow, o)
+
+
+def _conv_fwd_impl(x, w, stride, padding, policy):
+    if _conv_use_fused(x.shape, w.shape, stride, policy):
+        mult = get_multiplier(policy.multiplier)
+        return approx_conv2d_fused(
+            x, w, _amsim_lut(mult), mult.mantissa_bits,
+            stride=stride, padding=padding)
+    return conv2d_im2col(x, w, stride, padding, policy)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
@@ -289,12 +314,22 @@ def _conv_bwd(stride, padding, policy, res, g):
     kh, kw, _, o = w.shape
     pad = _conv_pads(h, wid, kh, kw, stride, padding)
     _, oh, ow, _ = g.shape
-    g2 = g.reshape(n * oh * ow, o).astype(jnp.float32)
+    fused = _conv_use_fused(x.shape, w.shape, stride, bp)
+    if fused:
+        mult = get_multiplier(bp.multiplier)
+        lut, M = _amsim_lut(mult), mult.mantissa_bits
 
-    # --- weight gradient (Fig. 8b): cols(x)^T @ g.  The paper's fused
-    # dilation corresponds to the strided im2col indexing inside ref_im2col.
-    cols = ref_im2col(x, kh, kw, stride, pad)        # (N*OH*OW, KH*KW*C)
-    dw = policy_matmul(cols.T, g2, bp).reshape(kh, kw, c, o)
+    # --- weight gradient (Fig. 8b): cols(x)^T @ g — the fused kernel
+    # computes the patch outer product in place of the materialised
+    # im2col^T GEMM; the paper's fused dilation corresponds to the
+    # strided patch slicing inside either lowering.
+    if fused:
+        dw = approx_conv2d_dw(x, g, lut, M, kh=kh, kw=kw, stride=stride,
+                              padding=padding)
+    else:
+        g2 = g.reshape(n * oh * ow, o).astype(jnp.float32)
+        cols = ref_im2col(x, kh, kw, stride, pad)    # (N*OH*OW, KH*KW*C)
+        dw = policy_matmul(cols.T, g2, bp).reshape(kh, kw, c, o)
 
     # --- preceding-layer gradient (Fig. 8c): full correlation of the
     # dilated+padded error with the reversed-transposed weights.
@@ -310,10 +345,17 @@ def _conv_bwd(stride, padding, policy, res, g):
     gw = gd.shape[2]
     pb = h - (gh + pt - kh + 1)
     pr = wid - (gw + pl_ - kw + 1)
-    gcols = ref_im2col(gd, kh, kw, 1, (pt, pb, pl_, pr))  # (N*H*W, KH*KW*O)
     wrev = w[::-1, ::-1, :, :]                             # reverse
-    wrt = jnp.transpose(wrev, (0, 1, 3, 2)).reshape(-1, c)  # transpose O<->C
-    dx = policy_matmul(gcols, wrt, bp).reshape(n, h, wid, c)
+    wrt4 = jnp.transpose(wrev, (0, 1, 3, 2))               # O <-> C
+    if fused and fused_supported(gd.shape, wrt4.shape, 1):
+        # Transposed conv IS a conv: the same fused forward kernel runs
+        # the stride-1 correlation under the explicit asymmetric pads.
+        dx = approx_conv2d_fused(gd, wrt4, lut, M, stride=1,
+                                 padding=(pt, pb, pl_, pr))
+    else:
+        gcols = ref_im2col(gd, kh, kw, 1, (pt, pb, pl_, pr))  # (N*H*W, KH*KW*O)
+        dx = policy_matmul(gcols, wrt4.reshape(-1, c), bp).reshape(
+            n, h, wid, c)
     return dx, dw
 
 

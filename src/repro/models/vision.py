@@ -3,6 +3,12 @@
 These use approx_conv2d (the AMCONV2D analogue) and policy-routed dense
 layers (AMDENSE), and are trained for real on CPU to reproduce the
 training-convergence experiments (Fig. 10, Tables III/IV, Fig. 11).
+
+Under ``policy.mode == "amsim"`` every conv here — stems, residual
+blocks, projections, LeNet-5 feature layers — lowers to the fused
+implicit-GEMM Pallas kernels of ``kernels/approx_conv.py`` (forward,
+dL/dx and dL/dw), so the paper's vision workloads run on the fast
+batched engine instead of materialised im2col + GEMM.
 """
 from __future__ import annotations
 

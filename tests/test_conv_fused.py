@@ -1,0 +1,263 @@
+"""Fused implicit-GEMM conv kernels (AMCONV2D analogue) vs numpy oracles.
+
+Covers the PR's conv deliverables:
+  * ``approx_conv2d_fused`` bit-exact against a pure-numpy im2col + LUT
+    oracle (sequential FP32 accumulation, chunk=1) for one multiplier
+    per family (exact / bf16 / mitchell8 / afm10);
+  * ``approx_conv2d_dw`` (patch outer product) bit-exact the same way;
+  * the fused custom VJP (mode="amsim") matches the reference im2col
+    VJP (mode="amsim_jnp") on both gradients;
+  * conv autotune namespace: key schema, cache round-trip, conv entries
+    coexisting with GEMM entries in one file;
+  * SAME-padding regression for even kernel sizes vs
+    ``lax.conv_general_dilated`` (asymmetric low/high split).
+"""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.amsim import np_amsim_multiply
+from repro.core.lutgen import get_lut
+from repro.core.multipliers import get_multiplier
+from repro.core.policy import NumericsPolicy
+from repro.kernels import autotune
+from repro.kernels.approx_conv import (approx_conv2d_dw, approx_conv2d_fused,
+                                       conv_pads, conv_out_shape)
+from repro.kernels.ops import approx_conv2d, conv2d_im2col
+from repro.kernels.ref import ref_conv2d
+
+NAT = NumericsPolicy()
+SIM = NumericsPolicy(mode="amsim", multiplier="afm16")
+SIMJ = NumericsPolicy(mode="amsim_jnp", multiplier="afm16")
+
+# One multiplier per family; LUTs cap at M=12 so "exact" runs at M=7
+# (same table family as trunc with RNE — still the exact-mantissa core).
+FAMILIES = ["exact7", "bf16", "mitchell8", "afm10"]
+
+
+# ------------------------------------------------------------ numpy oracle
+def _np_im2col(x, kh, kw, stride, pads):
+    """numpy im2col, tap-major / channel-minor — the fused kernel's
+    in-kernel gather order: (N*OH*OW, KH*KW, C)."""
+    n, h, w, c = x.shape
+    pt, pb, pl, pr = pads
+    xp = np.pad(x, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+    oh = (h + pt + pb - kh) // stride + 1
+    ow = (w + pl + pr - kw) // stride + 1
+    cols = np.empty((n, oh, ow, kh * kw, c), np.float32)
+    for i in range(kh):
+        for j in range(kw):
+            cols[:, :, :, i * kw + j, :] = xp[
+                :, i:i + (oh - 1) * stride + 1:stride,
+                j:j + (ow - 1) * stride + 1:stride, :]
+    return cols.reshape(n * oh * ow, kh * kw, c), oh, ow
+
+
+def _np_conv_oracle(x, w, lut, M, stride, pads):
+    """Sequential-accumulation numpy conv: the exact FP32 addition order
+    the fused kernel uses with chunk=1 (taps outer, channels inner)."""
+    n = x.shape[0]
+    kh, kw, c, o = w.shape
+    cols, oh, ow = _np_im2col(np.asarray(x, np.float32), kh, kw, stride, pads)
+    w2 = np.asarray(w, np.float32).reshape(kh * kw, c, o)
+    acc = np.zeros((cols.shape[0], o), np.float32)
+    for t in range(kh * kw):
+        for cc in range(c):
+            acc = acc + np_amsim_multiply(
+                cols[:, t, cc, None], w2[t, cc, None, :], lut, M)
+    return acc.reshape(n, oh, ow, o)
+
+
+def _np_dw_oracle(x, g, lut, M, kh, kw, stride, pads):
+    """Sequential patch-outer-product: batch outer, patches inner —
+    the dw kernel's accumulation order with chunk=1."""
+    n = x.shape[0]
+    c = x.shape[-1]
+    o = g.shape[-1]
+    cols, oh, ow = _np_im2col(np.asarray(x, np.float32), kh, kw, stride, pads)
+    cols = cols.reshape(n, oh * ow, kh * kw, c)
+    g2 = np.asarray(g, np.float32).reshape(n, oh * ow, o)
+    dw = np.zeros((kh * kw, c, o), np.float32)
+    for nn in range(n):
+        for p in range(oh * ow):
+            dw = dw + np_amsim_multiply(
+                cols[nn, p, :, :, None], g2[nn, p, None, None, :], lut, M)
+    return dw.reshape(kh, kw, c, o)
+
+
+# ----------------------------------------------------- forward bit-exactness
+@pytest.mark.parametrize("name", FAMILIES)
+def test_fused_conv_bitexact_vs_numpy_oracle(name, rng):
+    mult = get_multiplier(name)
+    M = mult.mantissa_bits
+    lut = get_lut(mult)
+    x = jnp.asarray(rng.standard_normal((2, 7, 6, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 3, 5)), jnp.float32)
+    pads = conv_pads(7, 6, 3, 3, 1, "SAME")
+    out = approx_conv2d_fused(x, w, lut, M, stride=1, padding="SAME",
+                              br=2, bo=5, chunk=1, interpret=True)
+    ref = _np_conv_oracle(np.asarray(x), np.asarray(w), lut, M, 1, pads)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+@pytest.mark.parametrize("stride,padding", [(2, "SAME"), (1, "VALID")])
+def test_fused_conv_bitexact_strided(stride, padding, rng):
+    mult = get_multiplier("afm16")
+    lut = get_lut(mult)
+    x = jnp.asarray(rng.standard_normal((2, 9, 8, 2)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 2, 4)), jnp.float32)
+    pads = conv_pads(9, 8, 3, 3, stride, padding)
+    out = approx_conv2d_fused(x, w, lut, 7, stride=stride, padding=padding,
+                              br=1, bo=4, chunk=1, interpret=True)
+    ref = _np_conv_oracle(np.asarray(x), np.asarray(w), lut, 7, stride, pads)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_fused_conv_default_tiling_matches_reference(rng):
+    """At the default (autotuned/fallback) tiling the accumulation order
+    differs from sequential — allclose vs the im2col+GEMM lowering."""
+    mult = get_multiplier("afm16")
+    lut = get_lut(mult)
+    x = jnp.asarray(rng.standard_normal((2, 12, 12, 5)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((5, 5, 5, 7)), jnp.float32)
+    out = approx_conv2d_fused(x, w, lut, 7, stride=2, padding="SAME",
+                              interpret=True)
+    ref = conv2d_im2col(x, w, 2, "SAME", SIMJ)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- dw bit-exactness
+def test_fused_dw_bitexact_vs_numpy_oracle(rng):
+    mult = get_multiplier("afm16")
+    lut = get_lut(mult)
+    x = jnp.asarray(rng.standard_normal((2, 6, 6, 3)), jnp.float32)
+    pads = conv_pads(6, 6, 3, 3, 1, "SAME")
+    oh, ow = conv_out_shape(6, 6, 3, 3, 1, pads)
+    g = jnp.asarray(rng.standard_normal((2, oh, ow, 4)), jnp.float32)
+    dw = approx_conv2d_dw(x, g, lut, 7, kh=3, kw=3, stride=1,
+                          padding="SAME", chunk=1, interpret=True)
+    ref = _np_dw_oracle(np.asarray(x), np.asarray(g), lut, 7, 3, 3, 1, pads)
+    np.testing.assert_array_equal(np.asarray(dw), ref)
+
+
+# --------------------------------------------------------------- fused VJP
+@pytest.mark.parametrize("stride,padding", [
+    (1, "SAME"), (2, "SAME"), (1, "VALID"), (2, "VALID")])
+def test_fused_vjp_matches_reference_vjp(stride, padding, rng):
+    """mode="amsim" (fused kernels, fwd + dx + dw) vs mode="amsim_jnp"
+    (im2col reference VJP): same LUT math, FP32 accumulation — equal up
+    to summation-order ulps."""
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 3, 4)), jnp.float32)
+    out_f = approx_conv2d(x, w, stride, padding, SIM)
+    out_r = approx_conv2d(x, w, stride, padding, SIMJ)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+    gf = jax.grad(lambda x, w: jnp.sum(
+        approx_conv2d(x, w, stride, padding, SIM) ** 2), (0, 1))(x, w)
+    gr = jax.grad(lambda x, w: jnp.sum(
+        approx_conv2d(x, w, stride, padding, SIMJ) ** 2), (0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gf[0]), np.asarray(gr[0]),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gf[1]), np.asarray(gr[1]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_dispatch_kill_switch(rng, monkeypatch):
+    """REPRO_CONV_FUSED=0 forces the materialised im2col lowering; the
+    result stays allclose to the fused one (same numerics model)."""
+    x = jnp.asarray(rng.standard_normal((1, 6, 6, 2)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 2, 3)), jnp.float32)
+    fused = approx_conv2d(x, w, 1, "SAME", SIM)
+    monkeypatch.setenv("REPRO_CONV_FUSED", "0")
+    unfused = approx_conv2d(x, w, 1, "SAME", SIM)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- even-kernel SAME padding
+@pytest.mark.parametrize("kh,kw", [(2, 2), (2, 4), (4, 4)])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_even_kernel_same_padding_matches_lax(kh, kw, stride, rng):
+    """Regression: SAME pads for even kernels are asymmetric (extra pad
+    on bottom/right).  conv_pads delegates to lax.padtype_to_pads, so
+    fwd AND both gradients must agree with conv_general_dilated."""
+    x = jnp.asarray(rng.standard_normal((2, 9, 7, 2)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((kh, kw, 2, 3)), jnp.float32)
+    pads = conv_pads(9, 7, kh, kw, stride, "SAME")
+    lax_pads = jax.lax.padtype_to_pads((9, 7), (kh, kw), (stride, stride),
+                                       "SAME")
+    assert pads == (*lax_pads[0], *lax_pads[1])
+    out = approx_conv2d(x, w, stride, "SAME", NAT)
+    ref = ref_conv2d(x, w, stride, "SAME")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    g1 = jax.grad(lambda x, w: jnp.sum(
+        approx_conv2d(x, w, stride, "SAME", NAT) ** 2), (0, 1))(x, w)
+    g2 = jax.grad(lambda x, w: jnp.sum(
+        ref_conv2d(x, w, stride, "SAME") ** 2), (0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(g1[0]), np.asarray(g2[0]),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(g1[1]), np.asarray(g2[1]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fused_even_kernel_same_matches_reference(rng):
+    """The fused amsim lowering honours the asymmetric even-kernel pads."""
+    mult = get_multiplier("afm16")
+    lut = get_lut(mult)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 2)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((2, 2, 2, 3)), jnp.float32)
+    out = approx_conv2d_fused(x, w, lut, 7, stride=1, padding="SAME",
+                              interpret=True)
+    ref = conv2d_im2col(x, w, 1, "SAME", SIMJ)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------- conv autotune namespace
+def test_conv_cache_key_schema():
+    key = autotune.conv_cache_key(8, 32, 32, 64, 3, 3, 64, 1, "SAME", 7,
+                                  backend="cpu")
+    assert key == "cpu|conv2d|n8_h32_w32_c64_k3x3_o64_s1_SAME|M7"
+    key = autotune.conv_cache_key(6, 14, 14, 6, 5, 5, 16, 2,
+                                  (1, 2, 1, 2), 7, backend="cpu")
+    assert key == "cpu|conv2d|n8_h14_w14_c8_k5x5_o16_s2_p1.2.1.2|M7"
+
+
+def test_conv_autotune_roundtrip_coexists_with_gemm(tmp_path, monkeypatch,
+                                                    rng):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "blocks.json"))
+    autotune.reload_cache()
+    mult = get_multiplier("afm16")
+    lut = get_lut(mult)
+    x = jnp.asarray(rng.standard_normal((1, 6, 6, 2)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 2, 3)), jnp.float32)
+    cands = [autotune.ConvBlockConfig(2, 3, 2, 4),
+             autotune.ConvBlockConfig(3, 3, 1, 9)]
+    won = autotune.autotune_conv(x, w, lut, 7, stride=1, padding="SAME",
+                                 candidates=cands, iters=1, interpret=True)
+    assert won in cands
+    # A GEMM entry lands in the same file without clobbering the conv one.
+    a = jnp.asarray(rng.standard_normal((2, 16, 16)), jnp.float32)
+    autotune.autotune("gemm3d", a, a, lut, 7, iters=1, interpret=True,
+                      candidates=[autotune.BlockConfig(16, 16, 16, 4)])
+    raw = json.loads((tmp_path / "blocks.json").read_text())
+    assert len(raw["entries"]) == 2
+    autotune.reload_cache()  # fresh-process simulation
+    got = autotune.get_conv_config(1, 6, 6, 2, 3, 3, 3, 1, "SAME", 7)
+    assert got == won
+    assert isinstance(autotune.get_block_config("gemm3d", 16, 16, 16, 7,
+                                                batch=2),
+                      autotune.BlockConfig)
+    # Kernel consumes the tuned entry at trace time and stays correct.
+    out = approx_conv2d_fused(x, w, jnp.asarray(lut), 7, interpret=True)
+    ref = conv2d_im2col(x, w, 1, "SAME", SIMJ)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    autotune.reload_cache()
