@@ -21,9 +21,9 @@ sys.path.insert(0, str(_ROOT / "src"))
 
 
 def _sections(smoke: bool):
-    # Smoke (the CI gate) imports only the two engine benches; an
+    # Smoke (the CI gate) imports only the three engine benches; an
     # import-time error in an unused full-run module must not brick it.
-    from benchmarks import bench_batched_gemm, bench_conv2d
+    from benchmarks import bench_attention, bench_batched_gemm, bench_conv2d
 
     if smoke:
         return [
@@ -31,6 +31,8 @@ def _sections(smoke: bool):
              lambda: bench_batched_gemm.main(smoke=True)),
             ("Fused approx-conv2d engine (smoke)",
              lambda: bench_conv2d.main(smoke=True)),
+            ("Fused approx-attention engine (smoke)",
+             lambda: bench_attention.main(smoke=True)),
         ]
     from benchmarks import (
         bench_convergence,
@@ -46,6 +48,7 @@ def _sections(smoke: bool):
         ("Fig.6 GEMM simulation perf", bench_gemm_sim.main),
         ("Batched approx-GEMM engine", bench_batched_gemm.main),
         ("Fused approx-conv2d engine", bench_conv2d.main),
+        ("Fused approx-attention engine", bench_attention.main),
         ("Fig.10/Table III convergence & accuracy", bench_convergence.main),
         ("Table IV cross-format matrix", bench_crossformat.main),
         ("Fig.11 pruning x multipliers", bench_pruning.main),

@@ -46,7 +46,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import autotune
-from repro.kernels.approx_gemm import _CompilerParams, _gather_gemm_tile
+from repro.kernels.common import (_ceil_to, _CompilerParams,
+                                  _gather_gemm_tile, best_chunk)
 
 # Static-unroll / VMEM guards for the fused path (see fused_supported).
 MAX_TAPS = 64                      # kh*kw positions unrolled in-kernel
@@ -95,17 +96,9 @@ def fused_supported(x_shape, w_shape, stride: int = 1) -> bool:
     return hp * wp * c * 4 <= MAX_IMAGE_BYTES
 
 
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def _snap_divisor(chunk: int, total: int) -> int:
-    """Largest value <= chunk that divides total (the gather fori_loop
-    drops tail elements otherwise — same contract as the GEMM resolver)."""
-    chunk = max(1, min(chunk, total))
-    while total % chunk:
-        chunk -= 1
-    return chunk
+# Chunk snapping is shared with the GEMM/attention resolvers: the gather
+# fori_loop drops tail elements unless chunk divides the total, and
+# ``best_chunk`` picks the nearest divisor instead of degrading to 1.
 
 
 # ------------------------------------------------------------------ forward
@@ -222,7 +215,7 @@ def approx_conv2d_fused(
         chunk = cfg.chunk if chunk is None else chunk
     br = max(1, min(br, oh))
     bo = max(1, min(bo, o))
-    chunk = _snap_divisor(chunk, c)
+    chunk = best_chunk(chunk, c)
     return _fused_impl(x, w, lut, M, stride=stride, pads=pads, br=br,
                        bo=bo, chunk=chunk, interpret=interpret)
 
@@ -328,6 +321,6 @@ def approx_conv2d_dw(
         cfg = autotune.get_conv_config(n, h, wid, c, kh, kw, o, stride,
                                        padding, M)
         chunk = cfg.dw_chunk
-    chunk = _snap_divisor(chunk, g.shape[1] * g.shape[2])
+    chunk = best_chunk(chunk, g.shape[1] * g.shape[2])
     return _dw_impl(x, g, lut, M, stride=stride, pads=pads, kh=kh, kw=kw,
                     chunk=chunk, interpret=interpret)

@@ -47,32 +47,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.amsim import _amsim
-from repro.core.float_bits import jnp_float
 from repro.kernels import autotune
-
-# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
-    pltpu, "TPUCompilerParams")
-
-
-def _gather_gemm_tile(a, b, lut, acc, *, M: int, chunk: int, packed: bool):
-    """Rank-`chunk` gather-GEMM update of the f32 accumulator tile."""
-    au = jax.lax.bitcast_convert_type(a, jnp.uint32)
-    bu = jax.lax.bitcast_convert_type(b, jnp.uint32)
-    bm, bk = a.shape
-    bn = b.shape[1]
-
-    def body(i, acc):
-        # Gather-simulate a (bm, chunk, bn) product brick on the VPU,
-        # reduce the chunk axis into the f32 accumulator.
-        ac = jax.lax.dynamic_slice(au, (0, i * chunk), (bm, chunk))
-        bc = jax.lax.dynamic_slice(bu, (i * chunk, 0), (chunk, bn))
-        ua, ub = jnp.broadcast_arrays(ac[:, :, None], bc[None, :, :])
-        prod = jnp_float(_amsim(ua, ub, lut, M, jnp, packed=packed))
-        return acc + jnp.sum(prod, axis=1, dtype=jnp.float32)
-
-    return jax.lax.fori_loop(0, bk // chunk, body, acc)
+# Shared bricks live in kernels/common.py (consumed by all three kernel
+# families); re-exported here for backward compatibility.
+from repro.kernels.common import (_ceil128, _CompilerParams,  # noqa: F401
+                                  _gather_gemm_tile, _pad_to, best_chunk)
 
 
 def _amsim_kernel(a_ref, b_ref, lut_ref, o_ref, acc_ref, *,
@@ -106,28 +85,16 @@ def _amsim_kernel_batched(a_ref, b_ref, lut_ref, o_ref, acc_ref, *,
         o_ref[0] = acc_ref[...]
 
 
-def _pad_to(x, *mults):
-    """Zero-pad the trailing len(mults) dims of x up to the given multiples."""
-    lead = x.ndim - len(mults)
-    pads = [(0, 0)] * lead + [
-        (0, (-x.shape[lead + i]) % m) for i, m in enumerate(mults)
-    ]
-    if any(p for _, p in pads):
-        x = jnp.pad(x, pads)
-    return x
-
-
-def _ceil128(x: int) -> int:
-    return -(-x // 128) * 128
-
-
 def _resolve(kind, m, k, n, M, batch, bm, bn, bk, chunk, interpret):
     """Fill unset tiling params from the autotune cache.
 
     Autotuned/default block sizes are clamped to the 128-rounded problem
     dims (a cache entry covers a pow2 bucket, so e.g. bk=256 must not pad
     a k=32 call out to 256 — 8x wasted gathers); explicit arguments are
-    taken as-is.  chunk is always clamped to bk.
+    taken as-is.  chunk is snapped to the nearest divisor of bk
+    (``best_chunk``: the gather fori_loop drops tail k-elements
+    otherwise, and a cached chunk must never silently degrade toward
+    chunk=1 when bk has no smaller divisor nearby).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -137,13 +104,7 @@ def _resolve(kind, m, k, n, M, batch, bm, bn, bk, chunk, interpret):
         bn = min(cfg.bn, _ceil128(n)) if bn is None else bn
         bk = min(cfg.bk, _ceil128(k)) if bk is None else bk
         chunk = cfg.chunk if chunk is None else chunk
-    # The kernel iterates fori_loop(0, bk // chunk): chunk MUST divide bk
-    # or the tail k-elements of every block are silently dropped.  Snap
-    # down to the nearest divisor (static at trace time).
-    chunk = min(chunk, bk)
-    while bk % chunk:
-        chunk -= 1
-    return bm, bn, bk, chunk, interpret
+    return bm, bn, bk, best_chunk(chunk, bk), interpret
 
 
 @functools.partial(

@@ -7,16 +7,21 @@ the real kernel and caches the winner in a JSON file on disk, keyed by
 
     <backend>|<kind>|<shape bucket>|M<M>
 
-where *kind* is ``gemm2d`` / ``gemm3d`` / ``conv2d``.  The GEMM bucket
-rounds every dimension up to a power of two (so one sweep covers a family
-of nearby shapes); the conv bucket keeps H/W/KHxKW/stride/padding exact
-(they fix the in-kernel slicing structure) and pow2-buckets N/C/O.
-``approx_gemm`` / ``approx_gemm_batched`` / ``approx_conv2d_fused``
-consult the cache at trace time via :func:`get_block_config` /
-:func:`get_conv_config`; a miss falls back to safe defaults — tuning
-itself only runs when :func:`autotune` / :func:`autotune_conv` is called
-explicitly (``benchmarks/bench_batched_gemm.py --autotune``,
-``benchmarks/bench_conv2d.py --autotune``).
+where *kind* is ``gemm2d`` / ``gemm3d`` / ``conv2d`` / ``attention``.
+The GEMM bucket rounds every dimension up to a power of two (so one
+sweep covers a family of nearby shapes); the conv bucket keeps
+H/W/KHxKW/stride/padding exact (they fix the in-kernel slicing
+structure) and pow2-buckets N/C/O; the attention bucket pow2-buckets
+B*KV/S/T and keeps G/head_dim exact.  ``approx_gemm`` /
+``approx_gemm_batched`` / ``approx_conv2d_fused`` /
+``approx_attention_fused`` consult the cache at trace time via
+:func:`get_block_config` / :func:`get_conv_config` /
+:func:`get_attn_config`; a miss falls back to safe defaults — tuning
+itself only runs when :func:`autotune` / :func:`autotune_conv` /
+:func:`autotune_attention` is called explicitly
+(``benchmarks/bench_batched_gemm.py --autotune``,
+``benchmarks/bench_conv2d.py --autotune``,
+``benchmarks/bench_attention.py --autotune``).
 
 Cache file schema (``REPRO_AUTOTUNE_CACHE``, default
 ``/tmp/repro_autotune/gemm_blocks.json``)::
@@ -79,6 +84,21 @@ class ConvBlockConfig:
         return (self.br, self.bo, self.chunk, self.dw_chunk)
 
 
+@dataclasses.dataclass(frozen=True)
+class AttnBlockConfig:
+    """One fused-attention tiling: ``bq`` query positions per grid cell
+    (x G group-heads = gather rows), ``bkv`` KV positions per in-kernel
+    streaming step, ``chunk`` gather brick (snapped to a divisor of dh
+    for the score GEMM and of bkv for the value GEMM)."""
+
+    bq: int = 128
+    bkv: int = 128
+    chunk: int = 64
+
+    def astuple(self):
+        return (self.bq, self.bkv, self.chunk)
+
+
 # Fallbacks when no tuned entry exists.  The batched kernel defaults to a
 # deeper k-tile / wider gather brick: one grid point per (batch, m, n) tile
 # amortises kernel-dispatch overhead that the vmapped 2-D path pays per
@@ -89,6 +109,10 @@ DEFAULT_BATCHED = BlockConfig(128, 128, 256, 64)
 # to O by the wrapper, avoiding the lane padding the GEMM path pays when
 # O < 128) and a full-C gather brick for the paper's C <= 128 layers.
 DEFAULT_CONV = ConvBlockConfig(8, 128, 64, 128)
+# Attention default: 128-query blocks (x G rows) against 128-KV streaming
+# steps — bkv=128 keeps the value-GEMM brick inside one jnp.sum while
+# still giving block-skip granularity for sliding-window decode.
+DEFAULT_ATTN = AttnBlockConfig(128, 128, 64)
 
 CANDIDATES_2D = [
     BlockConfig(128, 128, 128, 8),
@@ -111,6 +135,13 @@ CANDIDATES_CONV = [
     ConvBlockConfig(16, 128, 64, 256),
     ConvBlockConfig(8, 64, 64, 128),
 ]
+CANDIDATES_ATTN = [
+    AttnBlockConfig(64, 128, 64),
+    AttnBlockConfig(128, 128, 64),
+    AttnBlockConfig(128, 128, 128),
+    AttnBlockConfig(128, 256, 64),
+    AttnBlockConfig(256, 128, 64),
+]
 
 _MEM: dict[str, BlockConfig | ConvBlockConfig] | None = None  # file mirror
 
@@ -121,12 +152,15 @@ def cache_path() -> Path:
         "REPRO_AUTOTUNE_CACHE", "/tmp/repro_autotune/gemm_blocks.json"))
 
 
-def _parse_entry(e) -> BlockConfig | ConvBlockConfig | None:
+def _parse_entry(e) -> BlockConfig | ConvBlockConfig | AttnBlockConfig | None:
     """One cache entry -> config; None for nonsense (dropped silently)."""
     try:
         if "br" in e:
             cfg = ConvBlockConfig(int(e["br"]), int(e["bo"]),
                                   int(e["chunk"]), int(e["dw_chunk"]))
+        elif "bq" in e:
+            cfg = AttnBlockConfig(int(e["bq"]), int(e["bkv"]),
+                                  int(e["chunk"]))
         else:
             cfg = BlockConfig(int(e["bm"]), int(e["bn"]),
                               int(e["bk"]), int(e["chunk"]))
@@ -226,6 +260,20 @@ def conv_cache_key(n: int, h: int, w: int, c: int, kh: int, kw: int,
     return f"{backend}|conv2d|{bucket}|M{M}"
 
 
+def attn_shape_bucket(bh: int, s: int, t: int, g: int, dh: int) -> str:
+    """``bh`` = B x KV-heads (the kernel's flattened batch grid axis),
+    ``s``/``t`` query/key lengths, pow2-bucketed; G and head_dim exact
+    (they fix the gather-row layout and score-GEMM depth)."""
+    return (f"bh{_pow2_ceil(bh)}_s{_pow2_ceil(s)}_t{_pow2_ceil(t)}"
+            f"_g{g}_d{dh}")
+
+
+def attn_cache_key(bh: int, s: int, t: int, g: int, dh: int, M: int,
+                   backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    return f"{backend}|attention|{attn_shape_bucket(bh, s, t, g, dh)}|M{M}"
+
+
 # ------------------------------------------------------------------ lookup
 def get_block_config(kind: str, m: int, k: int, n: int, M: int,
                      batch: int = 0, backend: str | None = None) -> BlockConfig:
@@ -243,6 +291,13 @@ def get_conv_config(n: int, h: int, w: int, c: int, kh: int, kw: int,
     hit = _entries().get(
         conv_cache_key(n, h, w, c, kh, kw, o, stride, padding, M, backend))
     return hit if isinstance(hit, ConvBlockConfig) else DEFAULT_CONV
+
+
+def get_attn_config(bh: int, s: int, t: int, g: int, dh: int, M: int,
+                    backend: str | None = None) -> AttnBlockConfig:
+    """Tuned fused-attention tiling for this bucket, or DEFAULT_ATTN."""
+    hit = _entries().get(attn_cache_key(bh, s, t, g, dh, M, backend))
+    return hit if isinstance(hit, AttnBlockConfig) else DEFAULT_ATTN
 
 
 # ------------------------------------------------------------------ tuning
@@ -338,4 +393,43 @@ def autotune_conv(x, w, lut, M: int, *, stride: int = 1, padding="SAME",
     if save:
         _save_entry(conv_cache_key(n, h, wid, c, kh, kw, o, stride,
                                    padding, M), best, best_t * 1e6)
+    return best
+
+
+def autotune_attention(q, k, v, q_pos, k_pos, lut, M: int, *,
+                       causal: bool = True, window: int = 0,
+                       candidates=None, interpret: bool | None = None,
+                       iters: int = 2, save: bool = True) -> AttnBlockConfig:
+    """Sweep fused-attention tilings with the real kernel; cache + return
+    the winner.  ``q`` is (B, S, H, dh), ``k``/``v`` (B, T, KV, dh) —
+    representative operands for the bucket.  Candidates that fail to
+    lower are skipped; if every candidate fails DEFAULT_ATTN is returned
+    untouched.
+    """
+    from repro.kernels.approx_attention import approx_attention_fused
+
+    if candidates is None:
+        candidates = CANDIDATES_ATTN
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+
+    def run(cfg):
+        return approx_attention_fused(
+            q, k, v, q_pos, k_pos, lut, M, causal=causal, window=window,
+            bq=cfg.bq, bkv=cfg.bkv, chunk=cfg.chunk, interpret=interpret)
+
+    best, best_t = None, float("inf")
+    for cfg in candidates:
+        try:
+            t = _time_call(lambda: run(cfg), iters=iters)
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = cfg, t
+    if best is None:
+        return DEFAULT_ATTN
+    if save:
+        _save_entry(attn_cache_key(B * KV, S, T, G, dh, M), best,
+                    best_t * 1e6)
     return best

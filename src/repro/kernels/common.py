@@ -1,0 +1,115 @@
+"""Shared bricks for every LUT approx-kernel family (GEMM / conv / attention).
+
+The three fused engines (``approx_gemm``, ``approx_conv``,
+``approx_attention``) all reduce to the same inner operation: gather the
+mantissa-product LUT on the VPU over a rank-``chunk`` operand brick and
+accumulate in FP32 (the paper's AMSim device function inlined into the
+consuming GEMM, §V-B).  This module holds that brick plus the small
+layout helpers every family needs, so a numerics fix lands in one place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.amsim import _amsim
+from repro.core.float_bits import jnp_float
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def _gather_gemm_tile(a, b, lut, acc, *, M: int, chunk: int, packed: bool):
+    """Rank-``chunk`` gather-GEMM update of the f32 accumulator tile.
+
+    a (bm, bk) @ b (bk, bn) with the product simulated per element by the
+    LUT (canonical uint32 or packed uint16, chosen by ``packed``);
+    ``chunk`` must divide bk (see :func:`best_chunk`).
+    """
+    au = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    bu = jax.lax.bitcast_convert_type(b, jnp.uint32)
+    bm, bk = a.shape
+    bn = b.shape[1]
+
+    def body(i, acc):
+        # Gather-simulate a (bm, chunk, bn) product brick on the VPU,
+        # reduce the chunk axis into the f32 accumulator.
+        ac = jax.lax.dynamic_slice(au, (0, i * chunk), (bm, chunk))
+        bc = jax.lax.dynamic_slice(bu, (i * chunk, 0), (chunk, bn))
+        ua, ub = jnp.broadcast_arrays(ac[:, :, None], bc[None, :, :])
+        prod = jnp_float(_amsim(ua, ub, lut, M, jnp, packed=packed))
+        return acc + jnp.sum(prod, axis=1, dtype=jnp.float32)
+
+    return jax.lax.fori_loop(0, bk // chunk, body, acc)
+
+
+def attention_mask(q_pos, k_pos, *, causal: bool, window: int):
+    """(len(q_pos), len(k_pos)) bool validity mask — THE attention mask.
+
+    One definition shared by the fused kernel, the einsum reference and
+    the full-head einsum path: the fused/einsum bit-compatibility
+    contract requires all lowerings to mask identically, so none may
+    carry its own copy.  A key is valid iff its absolute position is
+    non-negative (negative = unwritten ring-buffer slot), not after the
+    query (``causal``) and inside the sliding ``window`` (0 = off).
+    """
+    mask = jnp.broadcast_to((k_pos >= 0)[None, :],
+                            (q_pos.shape[0], k_pos.shape[0]))
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    return mask
+
+
+def _pad_to(x, *mults):
+    """Zero-pad the trailing len(mults) dims of x up to the given multiples."""
+    lead = x.ndim - len(mults)
+    pads = [(0, 0)] * lead + [
+        (0, (-x.shape[lead + i]) % m) for i, m in enumerate(mults)
+    ]
+    if any(p for _, p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _ceil128(x: int) -> int:
+    return _ceil_to(x, 128)
+
+
+def best_chunk(chunk: int, total: int) -> int:
+    """The divisor of ``total`` closest to ``chunk`` in log-space,
+    capped at ``2 * chunk``.
+
+    The gather fori_loop runs ``total // chunk`` steps, so chunk MUST
+    divide total or tail elements are silently dropped.  The old policy
+    ("largest value <= chunk that divides total") degrades to chunk=1 —
+    a per-element loop, catastrophic — whenever total has no divisor
+    just below chunk (e.g. total=96 has none in (48, 96)).  Selecting
+    from the full divisor set instead may round *up* to a slightly
+    larger brick; the 2x cap bounds the VMEM growth of the
+    (bm, chunk, bn) product brick so a snapped-up chunk can never blow
+    the budget the caller sized for (a prime total still falls back to
+    1 — there is no divisor to rescue it).  Ties prefer the larger
+    divisor.  Static at trace time.
+    """
+    total = max(1, int(total))
+    chunk = max(1, int(chunk))
+    best, best_cost = 1, float("inf")
+    for d in range(1, int(total ** 0.5) + 1):
+        if total % d:
+            continue
+        for cand in (d, total // d):
+            if cand > 2 * chunk:
+                continue
+            big, small = max(cand, chunk), min(cand, chunk)
+            cost = big / small  # log-distance monotone; >= 1, 1 == exact
+            if cost < best_cost or (cost == best_cost and cand > best):
+                best, best_cost = cand, cost
+    return best

@@ -35,6 +35,9 @@ from repro.core.float_bits import jnp_truncate_mantissa, jnp_round_mantissa
 from repro.core.lutgen import get_lut, get_packed_lut
 from repro.core.multipliers import get_multiplier
 from repro.core.policy import NumericsPolicy
+from repro.kernels.approx_attention import (NEG_INF, approx_attention_fused,
+                                            attention_fused_supported)
+from repro.kernels.common import attention_mask, best_chunk
 from repro.kernels.approx_conv import (approx_conv2d_dw, approx_conv2d_fused,
                                        conv_pads, fused_supported)
 from repro.kernels.approx_gemm import approx_gemm, approx_gemm_batched
@@ -360,3 +363,133 @@ def _conv_bwd(stride, padding, policy, res, g):
 
 
 approx_conv2d.defvjp(_conv_fwd, _conv_bwd)
+
+
+# =====================================================================
+# Attention (one-launch fused kernel + einsum reference lowering)
+#
+# Two lowerings, mirroring the conv2d structure:
+#   * ``policy_attention`` — the fused Pallas kernel
+#     (kernels/approx_attention.py) when policy.mode == "amsim" and the
+#     shape fits the VMEM guards: one launch for score -> mask ->
+#     softmax -> value, scores never materialised in HBM;
+#   * ``attend_einsum`` — the grouped-query einsum chain (two
+#     policy_einsum contractions through approx_gemm_batched + a full
+#     mask/softmax pass).  Every other mode uses it directly; it is also
+#     the oracle the fused kernel is bit-tested against AND the path the
+#     fused custom VJP recomputes through, so gradients are identical to
+#     the pre-fused lowering whatever the forward took.
+# =====================================================================
+
+def attend_einsum(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
+                  causal: bool, window: int):
+    """Grouped-query einsum attention under ``policy`` numerics.
+
+    q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H,dh).  k_pos holds the
+    *absolute* position of every KV slot; negative means unwritten
+    (ring-buffer cache) and is masked out.  The KV-head axis stays a
+    batch axis so KV is never materialised at full head count.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, dh)
+    scores = policy_einsum("bqkgd,btkd->bkgqt", qg, k, policy) \
+        / jnp.sqrt(float(dh))
+    mask = attention_mask(q_pos, k_pos, causal=causal, window=window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = policy_einsum("bkgqt,btkd->bqkgd", probs, v, policy)
+    return out.reshape(B, S, H, dh)
+
+
+def fused_attention_enabled(policy: NumericsPolicy, q_shape, k_shape, *,
+                            causal: bool = True, window: int = 0) -> bool:
+    """Dispatch guard for the one-launch kernel: amsim mode only, killable
+    via REPRO_ATTN_FUSED=0, and the shape must pass the VMEM bounds
+    (window-compacted under a causal sliding window)."""
+    if policy.mode != "amsim" or policy.is_native:
+        return False
+    if os.environ.get("REPRO_ATTN_FUSED", "1").lower() in ("0", "false"):
+        return False
+    return attention_fused_supported(q_shape, k_shape, causal=causal,
+                                     window=window)
+
+
+def _attention_fwd_impl(q, k, v, q_pos, k_pos, policy, causal, window):
+    mult = get_multiplier(policy.multiplier)
+    return approx_attention_fused(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        q_pos, k_pos, _amsim_lut(mult), mult.mantissa_bits,
+        causal=causal, window=window)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def policy_attention(q, k, v, q_pos, k_pos, policy: NumericsPolicy,
+                     causal: bool, window: int):
+    """Differentiable one-launch fused attention under ``policy``.
+
+    Forward runs the fused Pallas kernel; the backward pass recomputes
+    through ``attend_einsum`` (jax.vjp), so gradients take exactly the
+    pre-fused einsum path — approximate backward GEMMs when
+    ``policy.approx_backward`` (handled inside policy_matmul's VJP),
+    native otherwise — bit-identical to the unfused lowering for
+    S <= _BWD_Q_CHUNK, q-chunked above that to keep the recompute's
+    score tensor memory-bounded (as the einsum path's forward scan
+    did).  Callers must have checked :func:`fused_attention_enabled`.
+    """
+    return _attention_fwd_impl(q, k, v, q_pos, k_pos, policy, causal, window)
+
+
+def _pattn_fwd(q, k, v, q_pos, k_pos, policy, causal, window):
+    out = _attention_fwd_impl(q, k, v, q_pos, k_pos, policy, causal, window)
+    return out, (q, k, v, q_pos, k_pos)
+
+
+# q-chunk length for the backward recompute (= ArchConfig.q_chunk's
+# default): the fused forward collapses models/attention's q-chunk scan
+# into its q-block grid axis, so the VJP must restore the memory bound
+# that scan provided — an unchunked attend_einsum recompute would
+# materialise the full (B, KV, G, S, T) score/probs tensors plus their
+# residuals in every backward pass.
+_BWD_Q_CHUNK = 1024
+
+
+def _pattn_bwd(policy, causal, window, res, g):
+    q, k, v, q_pos, k_pos = res
+    g = g.astype(jnp.float32)
+    B, S, H, dh = q.shape
+
+    def chunk_grads(q_c, qp_c, g_c):
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: attend_einsum(q_, k_, v_, qp_c, k_pos, policy,
+                                             causal=causal, window=window),
+            q_c, k, v)
+        return vjp(g_c)
+
+    # Snap the chunk to a divisor of S near the target so a
+    # non-multiple S (e.g. 1536 with target 1024 -> 768) keeps the
+    # memory bound instead of silently recomputing unchunked; only a
+    # degenerate divisor structure (prime-ish S, where chunking would
+    # mean per-row maps) falls back to the one-shot recompute.
+    bqc = best_chunk(_BWD_Q_CHUNK, S)
+    if S > bqc > _BWD_Q_CHUNK // 16:
+        # Attention rows are independent, so dq splits cleanly by q-chunk
+        # while dk/dv sum over chunks — the same decomposition the
+        # einsum path's forward scan induces on its backward.
+        nc = S // bqc
+        qc = q.reshape(B, nc, bqc, H, dh).swapaxes(0, 1)
+        gc = g.reshape(B, nc, bqc, H, dh).swapaxes(0, 1)
+        pc = q_pos.reshape(nc, bqc)
+        dqc, dkc, dvc = jax.lax.map(lambda a: chunk_grads(*a), (qc, pc, gc))
+        dq = dqc.swapaxes(0, 1).reshape(q.shape)
+        dk = jnp.sum(dkc, axis=0)
+        dv = jnp.sum(dvc, axis=0)
+    else:
+        dq, dk, dv = chunk_grads(q, q_pos, g)
+    zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int positions
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), \
+        zero(q_pos), zero(k_pos)
+
+
+policy_attention.defvjp(_pattn_fwd, _pattn_bwd)

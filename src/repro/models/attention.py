@@ -1,29 +1,40 @@
 """GQA attention with RoPE, KV cache, sliding window, cross-attention.
 
-Score and value matmuls route through ``policy.einsum`` (the paper's
+Score and value matmuls route through policy numerics (the paper's
 observation that MultiHeadAttention "involves matrix multiplication under
 the hood" — Table I); QKV/O projections route through ``policy.matmul``.
-The grouped-query einsum keeps the KV-head axis as a batch axis so KV is
-never materialised at full head count.  In the amsim modes those einsums
-rewrite to a (B*KV)-batched contraction that lowers to the single
-4-D-grid ``approx_gemm_batched`` Pallas kernel (kernels/approx_gemm.py)
-— one launch per score/value contraction with the LUT broadcast across
-the batch grid axis, instead of the former lax.map over 2-D GEMMs.
+Two attention lowerings, dispatched per call:
 
-Long sequences are processed in q-chunks (scan) so the score matrix never
-exceeds (B, KV, G, q_chunk, T) — the memory-side requirement for the
-32k-prefill dry-run cells.
+  * **fused** (``mode="amsim"``, shape within the VMEM guards): the
+    one-launch Pallas kernel ``kernels/approx_attention.py`` — score ->
+    mask -> softmax -> value in a single grid sweep, scores never
+    materialised in HBM, fully-masked KV blocks skipped so
+    sliding-window decode cost scales with ``window`` not the cache
+    capacity.  The q-chunk scan below collapses into the kernel's
+    q-block grid axis.  ``REPRO_ATTN_FUSED=0`` kills the dispatch.
+  * **einsum** (every other mode, oversize shapes, kill switch): the
+    grouped-query einsum chain ``kernels/ops.attend_einsum`` — the
+    KV-head axis stays a batch axis and the contractions lower to the
+    4-D-grid ``approx_gemm_batched`` kernel in the amsim modes.  Long
+    sequences are processed in q-chunks (scan) so the score matrix
+    never exceeds (B, KV, G, q_chunk, T) — the memory-side requirement
+    for the 32k-prefill dry-run cells.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.policy import NumericsPolicy
+# NEG_INF is shared with the fused kernel and the einsum reference (one
+# constant — the fused/einsum bit-compatibility contract depends on it).
+from repro.kernels.common import attention_mask
+from repro.kernels.ops import (NEG_INF, attend_einsum,
+                               fused_attention_enabled, policy_attention)
 from repro.models.layers import init_linear, linear
-
-NEG_INF = -1e30
 
 
 def init_attention(key, cfg: ArchConfig):
@@ -37,11 +48,24 @@ def init_attention(key, cfg: ArchConfig):
     }
 
 
+@functools.lru_cache(maxsize=None)
+def _rope_freqs(half: int, theta: float):
+    """Per-(head_dim, theta) inverse-frequency table, computed once per
+    process instead of per rope() call (it is shape/config-, not data-,
+    dependent; under jit the cached concrete array embeds as a constant,
+    and eager callers skip the recompute entirely).
+    ensure_compile_time_eval keeps the computation eager even when the
+    first call happens under a jit trace — caching a tracer here would
+    leak it out of its trace."""
+    with jax.ensure_compile_time_eval():
+        return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
 def rope(x, positions, theta: float):
     """Rotary embedding. x: (B, S, H, dh), positions: (S,) or (B, S)."""
     dh = x.shape[-1]
     half = dh // 2
-    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    freqs = _rope_freqs(half, float(theta))
     if positions.ndim == 1:
         ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
         ang = ang[None, :, None, :]
@@ -59,7 +83,8 @@ def _wsc(x, *spec):
 
 
 def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
-                     causal: bool, window: int, daxes):
+                     causal: bool, window: int, daxes,
+                     fused: bool | None = None):
     """§Perf optimisation: repeat KV to full head count and shard the head
     axis over "model" with explicit constraints — keeps score/prob tensors
     sharded 1/TP instead of replicated (GSPMD often fails to propagate
@@ -67,20 +92,25 @@ def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
     B, S, H, dh = q.shape
     KV = k.shape[2]
     G = H // KV
+    ap = policy.for_attention()
+    if fused is None:  # direct callers: derive the dispatch locally
+        fused = jax.device_count() == 1 and fused_attention_enabled(
+            ap, q.shape, k.shape, causal=causal, window=window)
+    if fused:
+        # Single device: sharding constraints are no-ops, so the fused
+        # one-launch kernel takes the call — on the original *grouped*
+        # K/V (it folds G into its gather rows), skipping the G-fold
+        # repeat below that the einsum layout needs.
+        return policy_attention(q, k, v, q_pos, k_pos, ap, causal, window)
     if G > 1:
         k = jnp.repeat(k, G, axis=2)
         v = jnp.repeat(v, G, axis=2)
     q = _wsc(q, daxes, None, "model", None)
     k = _wsc(k, daxes, None, "model", None)
     v = _wsc(v, daxes, None, "model", None)
-    ap = policy.for_attention()
     scores = ap.einsum("bqhd,bthd->bhqt", q, k) / jnp.sqrt(float(dh))
     scores = _wsc(scores, daxes, "model", None, None)
-    mask = (k_pos >= 0)[None, :] & jnp.ones((S, 1), bool)
-    if causal:
-        mask &= k_pos[None, :] <= q_pos[:, None]
-    if window:
-        mask &= k_pos[None, :] > q_pos[:, None] - window
+    mask = attention_mask(q_pos, k_pos, causal=causal, window=window)
     probs = jax.nn.softmax(
         jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF), -1)
     out = ap.einsum("bhqt,bthd->bqhd", probs, v)
@@ -88,27 +118,25 @@ def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
 
 
 def _attend(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
-            causal: bool, window: int):
-    """q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H,dh). Grouped-query einsum.
+            causal: bool, window: int, fused: bool | None = None):
+    """q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H,dh).
 
-    k_pos holds the *absolute* position of every KV slot; negative means
-    unwritten (ring-buffer cache) and is masked out.
+    Dispatch: the fused one-launch kernel under ``mode="amsim"`` (shape
+    permitting, ``REPRO_ATTN_FUSED=0`` to kill), the grouped-query
+    einsum chain otherwise.  ``attention()`` passes the decision in
+    (``fused``) so the q-chunk-scan skip and the inner dispatch can
+    never disagree; direct callers may leave it None to self-derive.
+    k_pos holds the *absolute* position of every KV slot; negative
+    means unwritten (ring-buffer cache) and is masked out.
     """
-    B, S, H, dh = q.shape
-    T, KV = k.shape[1], k.shape[2]
-    G = H // KV
-    qg = q.reshape(B, S, KV, G, dh)
     ap = policy.for_attention()
-    scores = ap.einsum("bqkgd,btkd->bkgqt", qg, k) / jnp.sqrt(float(dh))
-    mask = (k_pos >= 0)[None, :] & jnp.ones((S, 1), bool)
-    if causal:
-        mask &= k_pos[None, :] <= q_pos[:, None]
-    if window:
-        mask &= k_pos[None, :] > q_pos[:, None] - window
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
-    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
-    out = ap.einsum("bkgqt,btkd->bqkgd", probs, v)
-    return out.reshape(B, S, H, dh)
+    if fused is None:
+        fused = fused_attention_enabled(ap, q.shape, k.shape, causal=causal,
+                                        window=window)
+    if fused:
+        return policy_attention(q, k, v, q_pos, k_pos, ap, causal, window)
+    return attend_einsum(q, k, v, q_pos, k_pos, ap, causal=causal,
+                         window=window)
 
 
 def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
@@ -136,33 +164,64 @@ def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
         k = rope(k, q_pos, cfg.rope_theta)  # fresh K written at the same offsets
 
     if cache is not None:
-        # Ring-buffer cache: write the S new KVs at slot len % Tmax and
-        # record their absolute positions (sliding-window decode keeps a
-        # cache of only `window` slots; masking is position-based).
+        # Ring-buffer cache: write the S new KVs starting at slot
+        # len % Tmax and record their absolute positions (sliding-window
+        # decode keeps a cache of only `window` slots; masking is
+        # position-based).  A write that reaches the end of the buffer
+        # WRAPS: the single-token decode step keeps the contiguous
+        # dynamic_update_slice fast path (slot + 1 <= Tmax always), any
+        # larger write goes through a modular scatter so the boundary
+        # can never silently clamp and corrupt the newest entries.  A
+        # block longer than the buffer keeps only its last Tmax tokens
+        # (the earlier ones would be overwritten by the wrap anyway) —
+        # queries whose own keys were evicted that way see no valid key
+        # and emit garbage (zeros fused / uniform V-average einsum);
+        # only the surviving tail rows carry meaning, which is what
+        # decode consumes.
         Tmax = cache["k"].shape[1]
-        slot = cache["len"] % Tmax  # assumes the S-token write fits w/o wrap
         cdt = cache["k"].dtype
-        k = jax.lax.dynamic_update_slice(cache["k"], k.astype(cdt),
-                                         (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v.astype(cdt),
-                                         (0, slot, 0, 0))
-        pos = jax.lax.dynamic_update_slice(cache["pos"], q_pos, (slot,))
+        kw_, vw_, pw_ = k.astype(cdt), v.astype(cdt), q_pos
+        if S > Tmax:
+            kw_, vw_, pw_ = kw_[:, -Tmax:], vw_[:, -Tmax:], pw_[-Tmax:]
+        slot = (cache["len"] + max(0, S - Tmax)) % Tmax
+        if kw_.shape[1] == 1:
+            k = jax.lax.dynamic_update_slice(cache["k"], kw_, (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], vw_, (0, slot, 0, 0))
+            pos = jax.lax.dynamic_update_slice(cache["pos"], pw_, (slot,))
+        else:
+            idx = (slot + jnp.arange(kw_.shape[1], dtype=jnp.int32)) % Tmax
+            k = cache["k"].at[:, idx].set(kw_, unique_indices=True)
+            v = cache["v"].at[:, idx].set(vw_, unique_indices=True)
+            pos = cache["pos"].at[idx].set(pw_, unique_indices=True)
         cache = {"k": k, "v": v, "pos": pos, "len": cache["len"] + S}
         k_pos = pos
     else:
         k_pos = jnp.arange(Tsrc, dtype=jnp.int32) if kv_src is not None else q_pos
 
+    # Fused-dispatch decision, made ONCE here and passed down: the fused
+    # one-launch kernel blocks q internally (its q-block grid axis), so
+    # the memory-side motivation for the q-chunk scan — bounding the
+    # materialised (B, KV, G, q_chunk, T) score tensor — vanishes and
+    # the scan collapses into the kernel.  Sharing one decision with
+    # _attend/_attend_fullhead means the scan skip and the inner
+    # dispatch can never drift apart (skipping the scan while the inner
+    # call fell back to einsum would rematerialise the full score
+    # tensor the scan exists to bound).
+    fused = fused_attention_enabled(policy.for_attention(), q.shape, k.shape,
+                                    causal=causal, window=window) \
+        and (not cfg.shard_attn_heads or jax.device_count() == 1)
     if cfg.shard_attn_heads:
         attend = lambda qi, pi: _attend_fullhead(
             qi, k, v, pi, k_pos, policy, causal=causal, window=window,
+            fused=fused and qi.shape == q.shape,
             daxes=(cfg.mesh_data_axes if len(cfg.mesh_data_axes) > 1
                    else cfg.mesh_data_axes[0]))
     else:
         attend = lambda qi, pi: _attend(qi, k, v, pi, k_pos, policy,
-                                        causal=causal, window=window)
-
+                                        causal=causal, window=window,
+                                        fused=fused and qi.shape == q.shape)
     q_chunk = cfg.q_chunk if q_chunk is None else q_chunk
-    if S > q_chunk and S % q_chunk == 0:
+    if S > q_chunk and S % q_chunk == 0 and not fused:
         nc = S // q_chunk
         if cfg.unroll_attn_chunks:
             # Python-unrolled chunks: used by the dry-run so cost_analysis

@@ -70,10 +70,20 @@ class ServingEngine:
         both native and amsim numerics).
         """
         B = prompts.shape[0]
+        if max_new_tokens <= 0:
+            return jnp.zeros((B, 0), jnp.int32)
         caches = init_lm_caches(self.cfg, B, self.max_len)
         nxt, caches = self.prefill(self.params, prompts, caches)
-        outs = [nxt]
-        for _ in range(max_new_tokens - 1):
+        # Preallocated on-device token buffer instead of a growing
+        # per-token Python list + one big trailing concatenate: memory
+        # is bounded up front, and because the (B, max_new) int32 buffer
+        # stays on device the loop remains fully async-dispatchable —
+        # no host sync per token, one transfer when the caller reads the
+        # result.  The per-step dynamic_update_slice copies only the
+        # tiny token buffer, never the KV caches.
+        buf = jnp.zeros((B, max_new_tokens), jnp.int32)
+        buf = jax.lax.dynamic_update_slice(buf, nxt, (0, 0))
+        for i in range(1, max_new_tokens):
             _, nxt, caches = self.step(self.params, nxt, caches)
-            outs.append(nxt)
-        return jnp.concatenate(outs, axis=1)
+            buf = jax.lax.dynamic_update_slice(buf, nxt, (0, i))
+        return buf

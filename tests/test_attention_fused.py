@@ -1,0 +1,309 @@
+"""Fused one-launch attention kernel vs the amsim_jnp einsum oracle.
+
+Covers the PR's attention deliverables:
+  * ``approx_attention_fused`` bit-exact against ``attend_einsum`` under
+    ``amsim_jnp`` (one multiplier per family: exact / bf16 / mitchell /
+    afm) when the KV streaming structure matches the oracle's reduction
+    structure — causal, sliding-window, GQA (G>1), ring-buffer-decode
+    masks, and the 128-aligned multi-block regime;
+  * the fused custom VJP: bit-identical gradients to the einsum path it
+    recomputes through, and ulp-agreement with the amsim_jnp lowering;
+  * routing: ``mode="amsim"`` attention dispatches to the fused kernel,
+    ``REPRO_ATTN_FUSED=0`` kills it, and both lowerings agree;
+  * attention autotune namespace: key schema, round-trip, coexistence
+    with GEMM entries in one file;
+  * ring-buffer cache wrap regression: multi-token writes that cross the
+    buffer boundary land modularly instead of clamp-corrupting;
+  * ``best_chunk`` divisor selection (never degrades toward chunk=1).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.lutgen import get_lut, get_packed_lut
+from repro.core.multipliers import get_multiplier
+from repro.core.policy import NumericsPolicy
+from repro.kernels import autotune
+from repro.kernels.approx_attention import (POS_PAD, approx_attention_fused,
+                                            attention_fused_supported)
+from repro.kernels.common import best_chunk
+from repro.kernels.ops import (attend_einsum, fused_attention_enabled,
+                               policy_attention)
+from repro.models.attention import attention, init_attention, init_cache
+
+SIM = NumericsPolicy(mode="amsim", multiplier="afm16")
+SIMJ = NumericsPolicy(mode="amsim_jnp", multiplier="afm16")
+
+# One multiplier per family (LUTs cap at M=12, so "exact" runs at M=7).
+FAMILIES = ["exact7", "bf16", "mitchell8", "afm10"]
+
+
+def _mats(rng, B, S, KV, G, dh, T):
+    H = KV * G
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, KV, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, dh)), jnp.float32)
+    return q, k, v
+
+
+def _fused_vs_oracle(rng, name, *, B=2, S=6, KV=2, G=2, dh=8, T=6,
+                     causal=True, window=0, q_pos=None, k_pos=None, **kw):
+    mult = get_multiplier(name)
+    q, k, v = _mats(rng, B, S, KV, G, dh, T)
+    q_pos = jnp.arange(S, dtype=jnp.int32) if q_pos is None else q_pos
+    k_pos = jnp.arange(T, dtype=jnp.int32) if k_pos is None else k_pos
+    oracle = attend_einsum(
+        q, k, v, q_pos, k_pos,
+        NumericsPolicy(mode="amsim_jnp", multiplier=name),
+        causal=causal, window=window)
+    out = approx_attention_fused(
+        q, k, v, q_pos, k_pos, get_lut(mult), mult.mantissa_bits,
+        causal=causal, window=window, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+# ------------------------------------------------------ forward bit-exactness
+@pytest.mark.parametrize("name", FAMILIES)
+def test_fused_bitexact_vs_einsum_oracle(name, rng):
+    """Causal GQA, one KV block, gather bricks spanning the full
+    reductions: the kernel replays the oracle's FP32 op sequence."""
+    _fused_vs_oracle(rng, name, bq=3, bkv=8, chunk=256)
+
+
+def test_fused_bitexact_sliding_window(rng):
+    _fused_vs_oracle(rng, "afm16", S=10, T=10, window=4, bq=5, bkv=16,
+                     chunk=256)
+
+
+def test_fused_bitexact_full_head_layout(rng):
+    """G=1 with KV=H — the _attend_fullhead layout."""
+    _fused_vs_oracle(rng, "afm16", KV=4, G=1, S=7, T=9, bq=4, bkv=16,
+                     chunk=256)
+
+
+def test_fused_bitexact_ring_decode_mask(rng):
+    """Ring-buffer decode: permuted absolute positions with unwritten
+    (negative) slots, single query token, sliding window."""
+    k_pos = jnp.asarray([8, 9, 10, 11, 4, 5, 6, 7, POS_PAD, POS_PAD, 2, 3],
+                        jnp.int32)
+    q_pos = jnp.asarray([12], jnp.int32)
+    _fused_vs_oracle(rng, "afm16", S=1, T=12, window=6, q_pos=q_pos,
+                     k_pos=k_pos, bq=1, bkv=4, chunk=256)
+
+
+def test_fused_gapped_qpos_requires_contiguity_flag(rng):
+    """Window compaction assumes contiguous q_pos; gapped positions must
+    pass contiguous_q=False (which disables compaction) to stay correct.
+    Regression for the silent live-slot truncation the contract guards."""
+    mult = get_multiplier("afm16")
+    q, k, v = _mats(rng, 1, 2, 1, 1, 8, 64)
+    q_pos = jnp.asarray([5, 60], jnp.int32)  # gapped: live set > window+S
+    k_pos = jnp.arange(64, dtype=jnp.int32)
+    oracle = attend_einsum(q, k, v, q_pos, k_pos, SIMJ, causal=True,
+                           window=8)
+    out = approx_attention_fused(q, k, v, q_pos, k_pos, get_lut(mult), 7,
+                                 causal=True, window=8, contiguous_q=False,
+                                 bq=2, bkv=64, chunk=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+def test_fused_bitexact_multiblock_aligned(rng):
+    """T % 128 == 0 with bkv = chunk = 128 mirrors the oracle's
+    _K_CHUNK accumulation order: bit-exact across multiple KV blocks."""
+    _fused_vs_oracle(rng, "afm16", B=1, S=32, KV=2, G=1, dh=32, T=256,
+                     bq=16, bkv=128, chunk=128)
+
+
+def test_fused_packed_lut_bitwise(rng):
+    """Packed uint16 LUT produces bitwise-identical output to the
+    canonical uint32 table (same unpack contract as the GEMM kernels)."""
+    mult = get_multiplier("afm16")
+    packed = get_packed_lut(mult)
+    assert packed is not None
+    q, k, v = _mats(rng, 2, 5, 2, 2, 8, 7)
+    pos_q = jnp.arange(5, dtype=jnp.int32)
+    pos_k = jnp.arange(7, dtype=jnp.int32)
+    a = approx_attention_fused(q, k, v, pos_q, pos_k, get_lut(mult), 7,
+                               causal=True, interpret=True)
+    b = approx_attention_fused(q, k, v, pos_q, pos_k, packed, 7,
+                               causal=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------- VJP
+def test_fused_vjp_bit_identical_to_einsum_path(rng):
+    """policy_attention's backward literally recomputes through
+    attend_einsum, and at an oracle-aligned shape the primals match
+    bitwise too — so whole gradients are bit-identical to the unfused
+    amsim lowering."""
+    q, k, v = _mats(rng, 1, 6, 2, 2, 8, 6)
+    q_pos = jnp.arange(6, dtype=jnp.int32)
+    loss_f = lambda q_, k_, v_: jnp.sum(
+        policy_attention(q_, k_, v_, q_pos, q_pos, SIM, True, 0) ** 2)
+    loss_e = lambda q_, k_, v_: jnp.sum(
+        attend_einsum(q_, k_, v_, q_pos, q_pos, SIM, causal=True,
+                      window=0) ** 2)
+    gf = jax.grad(loss_f, (0, 1, 2))(q, k, v)
+    ge = jax.grad(loss_e, (0, 1, 2))(q, k, v)
+    for a, b in zip(gf, ge):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_vjp_chunked_recompute_matches_unchunked(rng, monkeypatch):
+    """Above _BWD_Q_CHUNK the backward recompute q-chunks attend_einsum
+    to stay memory-bounded; the chunked decomposition must reproduce the
+    unchunked gradients (rows are independent, dk/dv sum over chunks)."""
+    import repro.kernels.ops as ops_mod
+    q, k, v = _mats(rng, 1, 8, 2, 2, 8, 8)
+    q_pos = jnp.arange(8, dtype=jnp.int32)
+    loss = lambda q_, k_, v_: jnp.sum(
+        policy_attention(q_, k_, v_, q_pos, q_pos, SIM, True, 0) ** 2)
+    g_un = jax.grad(loss, (0, 1, 2))(q, k, v)
+    monkeypatch.setattr(ops_mod, "_BWD_Q_CHUNK", 4)  # force chunking
+    g_ch = jax.grad(loss, (0, 1, 2))(q, k, v)
+    for a, b in zip(g_un, g_ch):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_vjp_matches_reference_numerics(rng):
+    """mode="amsim" fused attention vs the portable amsim_jnp lowering:
+    same LUT math, FP32 accumulation — gradients agree to ulps."""
+    q, k, v = _mats(rng, 2, 8, 2, 2, 16, 8)
+    q_pos = jnp.arange(8, dtype=jnp.int32)
+
+    def loss(policy):
+        def fn(q_, k_, v_):
+            if fused_attention_enabled(policy, q_.shape, k_.shape):
+                out = policy_attention(q_, k_, v_, q_pos, q_pos, policy,
+                                       True, 3)
+            else:
+                out = attend_einsum(q_, k_, v_, q_pos, q_pos, policy,
+                                    causal=True, window=3)
+            return jnp.sum(out ** 2)
+        return fn
+
+    gf = jax.grad(loss(SIM), (0, 1, 2))(q, k, v)
+    gr = jax.grad(loss(SIMJ), (0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------- routing
+def test_attention_dispatches_fused_and_kill_switch(rng, monkeypatch):
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    assert fused_attention_enabled(
+        SIM, (2, 8, cfg.n_heads, cfg.head_dim),
+        (2, 8, cfg.n_kv_heads, cfg.head_dim))
+    out_f, _ = attention(p, x, cfg, SIM)
+    monkeypatch.setenv("REPRO_ATTN_FUSED", "0")
+    assert not fused_attention_enabled(
+        SIM, (2, 8, cfg.n_heads, cfg.head_dim),
+        (2, 8, cfg.n_kv_heads, cfg.head_dim))
+    out_e, _ = attention(p, x, cfg, SIM)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_e),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_supported_guards():
+    # Oversize KV footprint falls back (32k decode cache at dh=128).
+    assert not attention_fused_supported((1, 1, 8, 128), (1, 32768, 8, 128))
+    # Paper-scale shapes are in.
+    assert attention_fused_supported((8, 512, 16, 64), (8, 512, 4, 64))
+    # Ragged head grouping is out.
+    assert not attention_fused_supported((1, 8, 6, 16), (1, 8, 4, 16))
+
+
+# ---------------------------------------------------- autotune namespace
+def test_attn_cache_key_schema():
+    key = autotune.attn_cache_key(16, 256, 256, 4, 64, 7, backend="cpu")
+    assert key == "cpu|attention|bh16_s256_t256_g4_d64|M7"
+
+
+def test_attn_autotune_roundtrip_coexists(tmp_path, monkeypatch, rng):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "blocks.json"))
+    autotune.reload_cache()
+    mult = get_multiplier("afm16")
+    lut = get_lut(mult)
+    q, k, v = _mats(rng, 1, 8, 2, 2, 8, 8)
+    pos = jnp.arange(8, dtype=jnp.int32)
+    cands = [autotune.AttnBlockConfig(4, 8, 8),
+             autotune.AttnBlockConfig(8, 4, 4)]
+    won = autotune.autotune_attention(q, k, v, pos, pos, lut, 7,
+                                      candidates=cands, iters=1,
+                                      interpret=True)
+    assert won in cands
+    # A GEMM entry lands in the same file without clobbering it.
+    a = jnp.asarray(rng.standard_normal((2, 16, 16)), jnp.float32)
+    autotune.autotune("gemm3d", a, a, lut, 7, iters=1, interpret=True,
+                      candidates=[autotune.BlockConfig(16, 16, 16, 4)])
+    autotune.reload_cache()  # fresh-process simulation
+    got = autotune.get_attn_config(2, 8, 8, 2, 8, 7)
+    assert got == won
+    # Kernel consumes the tuned entry at trace time and stays correct.
+    out = approx_attention_fused(q, k, v, pos, pos, jnp.asarray(lut), 7,
+                                 interpret=True)
+    ref = attend_einsum(q, k, v, pos, pos, SIMJ, causal=True, window=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    autotune.reload_cache()
+
+
+# ------------------------------------------------- ring-buffer wrap fix
+def _run_cached(cfg, p, policy, xs, Tmax, window):
+    cache = init_cache(cfg, xs[0].shape[0], Tmax)
+    outs = []
+    for x in xs:
+        out, cache = attention(p, x, cfg, policy, cache=cache, window=window)
+        outs.append(out)
+    return outs, cache
+
+
+def test_ring_buffer_wrap_regression(rng):
+    """A multi-token write crossing the ring boundary must land
+    modularly: decode through a Tmax=8 ring equals decode through a
+    buffer big enough to never wrap (window makes old slots dead)."""
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    p = init_attention(jax.random.PRNGKey(1), cfg)
+    window = 4
+    xs = [jnp.asarray(rng.standard_normal((2, 6, cfg.d_model)), jnp.float32),
+          jnp.asarray(rng.standard_normal((2, 4, cfg.d_model)), jnp.float32)]
+    for policy in (NumericsPolicy(), SIM):
+        ring, rcache = _run_cached(cfg, p, policy, xs, 8, window)
+        big, _ = _run_cached(cfg, p, policy, xs, 32, window)
+        # Second write spans slots 6,7,0,1 — the regression case.
+        np.testing.assert_array_equal(
+            np.asarray(rcache["pos"]), np.asarray([8, 9, 2, 3, 4, 5, 6, 7]))
+        assert int(rcache["len"]) == 10
+        np.testing.assert_allclose(np.asarray(ring[1]), np.asarray(big[1]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ring_buffer_overlong_write_keeps_tail(rng):
+    """Writing more tokens than the buffer holds keeps exactly the last
+    Tmax of them (the earlier ones would be overwritten by the wrap)."""
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    p = init_attention(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(rng.standard_normal((1, 10, cfg.d_model)), jnp.float32)
+    cache = init_cache(cfg, 1, 8)
+    _, cache = attention(p, x, cfg, NumericsPolicy(), cache=cache, window=4)
+    np.testing.assert_array_equal(
+        np.asarray(cache["pos"]), np.asarray([8, 9, 2, 3, 4, 5, 6, 7]))
+    assert int(cache["len"]) == 10
+
+
+# ------------------------------------------------------------- best_chunk
+def test_best_chunk_never_degrades_to_one():
+    assert best_chunk(64, 127) == 127     # prime: old policy snapped to 1
+    assert best_chunk(64, 96) == 48       # nearest divisor in log-space
+    assert best_chunk(64, 256) == 64      # exact divisor kept
+    assert best_chunk(1, 12) == 1         # explicit chunk=1 respected
+    assert best_chunk(200, 64) == 64      # clamped to the total
+    # Snap-up is capped at 2x the request: a large prime total must not
+    # inflate the product brick past the caller's VMEM sizing.
+    assert best_chunk(64, 251) == 1
+    assert best_chunk(64, 160) == 80      # rounds UP within the 2x cap
