@@ -7,6 +7,16 @@
 5. Take a training step where every GEMM (fwd + bwd) is approximate.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Execution-mode matrix (``NumericsPolicy(mode=...)`` — full details in
+docs/numerics.md and docs/configuration.md):
+
+  native     exact f32 baseline
+  surrogate  truncate operands + native dot (truncation family only)
+  amsim      fused Pallas LUT kernels; under a ``with mesh:`` context
+             they run per shard (docs/distributed.md)
+  amsim_jnp  pure-jnp LUT oracle (used below — runs anywhere)
+  direct     bit-level multiplier model in jnp
 """
 import jax
 import jax.numpy as jnp

@@ -3,6 +3,15 @@ optional approximate-multiplier numerics — the decode path the
 ``decode_32k`` dry-run cells lower at production scale.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --new-tokens 24
+      # sharded serving: fused LUT kernels per shard on a debug mesh
+      XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/serve_lm.py --numerics amsim \
+          --multiplier mitchell8 --mesh
+
+Mode matrix: native | surrogate | amsim (fused LUT kernels; with
+``--mesh`` they run per shard via distributed/shard_fused) | amsim_jnp
+(default here — portable oracle) | direct.  See docs/numerics.md,
+docs/distributed.md and docs/configuration.md.
 """
 import argparse
 import time
@@ -11,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import MODES, NumericsPolicy
+from repro.launch.mesh import make_debug_mesh
 from repro.models.transformer import init_lm
 from repro.serve.engine import ServingEngine
 
@@ -22,16 +32,24 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=24)
-    ap.add_argument("--numerics", default="amsim_jnp")
+    ap.add_argument("--numerics", default="amsim_jnp", choices=MODES,
+                    help="native | surrogate | amsim | amsim_jnp | direct "
+                         "(docs/numerics.md)")
     ap.add_argument("--multiplier", default="afm16")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve on a 2x2 debug mesh (needs >= 4 devices; "
+                         "with --numerics amsim the fused kernels run per "
+                         "shard — docs/distributed.md)")
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
     policy = (NumericsPolicy() if args.numerics == "native" else
               NumericsPolicy(mode=args.numerics, multiplier=args.multiplier))
     params = init_lm(jax.random.PRNGKey(0), cfg)
+    mesh = make_debug_mesh(2, 2) if args.mesh else None
     engine = ServingEngine(cfg, policy, params,
-                           max_len=args.prompt_len + args.new_tokens + 1)
+                           max_len=args.prompt_len + args.new_tokens + 1,
+                           mesh=mesh)
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab,
                                  jnp.int32)

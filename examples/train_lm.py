@@ -11,6 +11,13 @@ path the 512-chip dry-run lowers).
 Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
       PYTHONPATH=src python examples/train_lm.py --numerics surrogate \
           --multiplier bf16
+      PYTHONPATH=src python examples/train_lm.py --numerics amsim \
+          --multiplier mitchell8   # fused Pallas LUT kernels
+
+Mode matrix: native (exact f32) | surrogate (truncate + MXU) | amsim
+(fused LUT kernels; sharded per shard under a mesh — use
+launch/train.py for the mesh driver) | amsim_jnp (jnp oracle) | direct
+(bit-level model).  See docs/numerics.md and docs/configuration.md.
 """
 import argparse
 import dataclasses
@@ -19,7 +26,7 @@ import jax
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import MODES, NumericsPolicy
 from repro.data.pipeline import lm_batch
 from repro.models.transformer import init_lm, lm_loss
 from repro.optim.optimizers import cosine_schedule, make_optimizer
@@ -36,8 +43,12 @@ def main():
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--numerics", default="native")
-    ap.add_argument("--multiplier", default="fp32")
+    ap.add_argument("--numerics", default="native", choices=MODES,
+                    help="native | surrogate | amsim | amsim_jnp | direct "
+                         "(docs/numerics.md)")
+    ap.add_argument("--multiplier", default="fp32",
+                    help="multiplier model for non-native modes "
+                         "(bf16, afm16, mitchell8, exact7, ...)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
     args = ap.parse_args()
 

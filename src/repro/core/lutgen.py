@@ -13,7 +13,9 @@ directly).  Size: 2^(2M) * 4 bytes — 64 KiB for M=7, 16 MiB for M=11.
 
 The generator is fully vectorised (one batched call into the model) and
 results are cached on disk + in process, mirroring the paper's
-"generate once, load at run-time" flow.
+"generate once, load at run-time" flow.  The disk cache directory is
+``REPRO_LUT_DIR`` (default ``/tmp/repro_luts``; all REPRO_* knobs:
+docs/configuration.md).
 """
 from __future__ import annotations
 

@@ -5,3 +5,7 @@ from repro.distributed.sharding import (  # noqa: F401
 from repro.distributed.compression import (  # noqa: F401
     compressed_psum, dequantize_int8, init_ef_state, quantize_int8,
 )
+# Sharded fused-LUT dispatch (mode="amsim" under a mesh) — imported as a
+# module because model layers call it per-op: shard_fused.parallel_matmul,
+# shard_fused.sharded_attention, shard_fused.parallel_conv2d.
+from repro.distributed import shard_fused  # noqa: F401

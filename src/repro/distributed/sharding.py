@@ -147,11 +147,15 @@ def cache_pspecs(caches, mesh: Mesh, batch: int):
     def spec_for(path, leaf):
         s = _path_str(path)
         if re.search(r"(^|/)(k|v)$", s) and leaf.ndim >= 4:
-            # (L?, B, T, KV, dh): dh over model
+            # (L?, B, T, KV, dh): KV heads over model — the same layout
+            # the sharded fused attention kernel consumes (shard_fused:
+            # KV over "model", batch over data), so decode steps never
+            # reshard the cache.  When KV does not divide the model axis
+            # _fix_divisibility relocates the axis (typically onto dh).
             if batch_sharded:
-                tail = (daxes, None, None, "model")
+                tail = (daxes, None, "model", None)
             else:
-                tail = (None, daxes, None, "model")  # SP over cache length
+                tail = (None, daxes, "model", None)  # SP over cache length
             lead = (None,) * (leaf.ndim - 4)
             return P(*_fix_divisibility(lead + tail, leaf.shape, mesh))
         if re.search(r"ssm$", s) and leaf.ndim >= 4:

@@ -24,7 +24,8 @@ itself only runs when :func:`autotune` / :func:`autotune_conv` /
 ``benchmarks/bench_attention.py --autotune``).
 
 Cache file schema (``REPRO_AUTOTUNE_CACHE``, default
-``/tmp/repro_autotune/gemm_blocks.json``)::
+``/tmp/repro_autotune/gemm_blocks.json`` — every REPRO_* knob is
+catalogued in docs/configuration.md)::
 
     {
       "version": 1,

@@ -20,6 +20,14 @@ and backpropagation), unless ``policy.approx_backward`` is False, in which
 case gradients use native exact matmuls.
 
 Accumulation is always f32 (paper §VII).
+
+Distribution: these wrappers are single-logical-device ops — GSPMD
+cannot partition a pallas_call, so under a mesh it replicates the
+kernel.  The mesh-aware dispatch lives one layer up in
+``distributed/shard_fused`` (shard_map around these same kernels,
+collectives outside); model layers call it with their Megatron role.
+Kill switches REPRO_CONV_FUSED / REPRO_ATTN_FUSED below and
+REPRO_SHARD_FUSED up there are all documented in docs/configuration.md.
 """
 from __future__ import annotations
 
@@ -154,13 +162,22 @@ def policy_matmul(a, b, policy: NumericsPolicy):
     return _matmul_nograd(a, b, policy)
 
 
+def bwd_policy(policy: NumericsPolicy) -> NumericsPolicy:
+    """The policy backward GEMMs run under: the same approximate
+    numerics when ``policy.approx_backward`` (paper: both phases), exact
+    native matmuls otherwise.  Single definition shared by every custom
+    VJP here and by the sharded wrappers (distributed/shard_fused)."""
+    return policy if policy.approx_backward else dataclasses.replace(
+        policy, mode="native")
+
+
 def _mm_fwd(a, b, policy):
     return _matmul_nograd(a, b, policy), (a, b)
 
 
 def _mm_bwd(policy, res, g):
     a, b = res
-    bp = policy if policy.approx_backward else dataclasses.replace(policy, mode="native")
+    bp = bwd_policy(policy)
     g = g.astype(jnp.float32)
     swap = lambda x: jnp.swapaxes(x, -1, -2)
     # dA = g @ B^T  — same batch layout as forward.
@@ -312,7 +329,7 @@ def _conv_fwd(x, w, stride, padding, policy):
 
 def _conv_bwd(stride, padding, policy, res, g):
     x, w = res
-    bp = policy if policy.approx_backward else dataclasses.replace(policy, mode="native")
+    bp = bwd_policy(policy)
     n, h, wid, c = x.shape
     kh, kw, _, o = w.shape
     pad = _conv_pads(h, wid, kh, kw, stride, padding)

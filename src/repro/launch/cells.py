@@ -4,6 +4,15 @@ A "cell" packages: the step function (train_step / prefill / serve_step),
 ShapeDtypeStruct input specs (no allocation), and in/out shardings —
 everything ``dryrun.py`` needs to ``.lower().compile()`` and everything
 ``train.py`` / ``serve.py`` need to run for real.
+
+Numerics note: cells must be lowered INSIDE a ``with mesh:`` context
+(dryrun and train do this) — under ``policy.mode == "amsim"`` the model
+code then dispatches every supported GEMM/attention/conv to the
+per-shard fused LUT kernels via ``distributed/shard_fused`` (Megatron
+column/row-parallel matmuls, KV-heads-over-"model" attention, the KV
+cache already stored in that layout by ``sharding.cache_pspecs``).
+Unsupported shapes and REPRO_SHARD_FUSED=0 fall back to the einsum /
+GSPMD lowering; docs/distributed.md has the full routing table.
 """
 from __future__ import annotations
 

@@ -4,6 +4,11 @@ Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
       --batch 4 --prompt-len 16 --new-tokens 16 --numerics amsim_jnp \
       --multiplier afm16
+
+Sharded (debug mesh, fused LUT kernels per shard — docs/distributed.md):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --reduced --numerics amsim --multiplier mitchell8 --mesh
 """
 from __future__ import annotations
 
@@ -14,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import MODES, NumericsPolicy
+from repro.launch.mesh import make_debug_mesh
 from repro.serve.engine import ServingEngine
 from repro.models.transformer import init_lm
 
@@ -26,8 +32,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--numerics", default="native")
+    ap.add_argument("--numerics", default="native", choices=MODES,
+                    help="native | surrogate | amsim | amsim_jnp | direct "
+                         "(docs/numerics.md)")
     ap.add_argument("--multiplier", default="fp32")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve on a 2x2 debug mesh (>= 4 devices); with "
+                         "--numerics amsim the fused kernels run per shard")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,8 +52,10 @@ def main():
 
     key = jax.random.PRNGKey(args.seed)
     params = init_lm(key, cfg)
+    mesh = make_debug_mesh(2, 2) if args.mesh else None
     engine = ServingEngine(cfg, policy, params,
-                           max_len=args.prompt_len + args.new_tokens + 1)
+                           max_len=args.prompt_len + args.new_tokens + 1,
+                           mesh=mesh)
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab, jnp.int32)
     t0 = time.time()

@@ -5,22 +5,38 @@ the production mesh when 256+ devices are available, else a debug mesh.
 The same cell builders as the dry-run wire shardings, so this driver is
 the dry-run made executable.
 
-Example (CPU, reduced config):
+Numerics-mode matrix (``--numerics``; details in docs/configuration.md
+and docs/numerics.md):
+
+  native     exact f32 — the "TFnG" baseline, GSPMD-parallel.
+  surrogate  mantissa-truncated operands + native MXU dot — fastest
+             approximate mode, GSPMD-parallel (truncation family only).
+  amsim      fused Pallas LUT kernels.  Under a mesh the kernels run
+             PER SHARD via distributed/shard_fused (column/row-parallel
+             GEMMs, head/batch-sharded attention) — set
+             REPRO_SHARD_FUSED=0 to fall back to GSPMD's
+             replicated-kernel lowering.
+  amsim_jnp  pure-jnp LUT simulation — the portable oracle; GSPMD
+             shards it like any jnp program (no fused kernels).
+  direct     pure-jnp bit-level multiplier model (paper's direct sim).
+
+Example (CPU, reduced config, sharded fused kernels on a debug mesh):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
-      --reduced --steps 20 --batch 8 --seq 128 --numerics amsim_jnp \
+      --reduced --steps 20 --batch 8 --seq 128 --numerics amsim \
       --multiplier afm16
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 
 from repro.configs import SHAPES, get_arch, reduced
 from repro.configs.base import ShapeConfig
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import MODES, NumericsPolicy
 from repro.data.pipeline import lm_batch
+from repro.distributed import shard_fused
 from repro.distributed.sharding import lm_param_pspecs, opt_state_pspecs
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import encdec as encdec_mod
@@ -30,16 +46,39 @@ from repro.train.step import make_train_step
 from repro.train.trainer import Trainer, TrainerConfig, TrainerState
 
 
+def _describe_numerics(policy: NumericsPolicy, mesh) -> str:
+    """One honest line about which execution path this run lowers to."""
+    if policy.mode != "amsim":
+        return f"numerics={policy.mode}/{policy.multiplier}"
+    if mesh is None:
+        return (f"numerics=amsim/{policy.multiplier}: single-device fused "
+                f"LUT kernels")
+    if shard_fused.env_enabled():
+        return (f"numerics=amsim/{policy.multiplier}: sharded fused LUT "
+                f"kernels on mesh {dict(mesh.shape)} "
+                f"(REPRO_SHARD_FUSED=0 to disable)")
+    return (f"numerics=amsim/{policy.multiplier}: REPRO_SHARD_FUSED=0 — "
+            f"GSPMD fallback, kernels replicated per device")
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="distributed training driver (docs/distributed.md)")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--numerics", default="native")
-    ap.add_argument("--multiplier", default="fp32")
+    ap.add_argument("--numerics", default="native", choices=MODES,
+                    help="execution mode: native (exact f32) | surrogate "
+                         "(truncate + MXU) | amsim (fused Pallas LUT "
+                         "kernels; sharded per shard under a mesh — see "
+                         "docs/distributed.md) | amsim_jnp (portable jnp "
+                         "oracle) | direct (bit-level model)")
+    ap.add_argument("--multiplier", default="fp32",
+                    help="approximate-multiplier name for non-native modes "
+                         "(e.g. bf16, afm16, mitchell8, exact7)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -59,6 +98,7 @@ def main():
         mesh = make_debug_mesh(2, 2)
     else:
         mesh = None
+    print(_describe_numerics(policy, mesh))
 
     key = jax.random.PRNGKey(args.seed)
     if cfg.family == "encdec":
@@ -82,6 +122,10 @@ def main():
                            is_leaf=lambda x: type(x).__name__ == "PartitionSpec")
         params = jax.device_put(params, psh)
         opt_state = jax.device_put(opt_state, osh)
+        # Trace INSIDE the mesh context: shard_fused reads the ambient
+        # mesh at trace time — this is what routes mode="amsim" through
+        # the per-shard fused kernels instead of GSPMD's replicated
+        # pallas_call lowering.
         with mesh:
             step_fn = jax.jit(step_fn)
             run_train(step_fn, cfg, shape, params, opt_state, args)

@@ -2,10 +2,17 @@
 
 Score and value matmuls route through policy numerics (the paper's
 observation that MultiHeadAttention "involves matrix multiplication under
-the hood" — Table I); QKV/O projections route through ``policy.matmul``.
-Two attention lowerings, dispatched per call:
+the hood" — Table I); QKV/O projections route through ``policy.matmul``
+with their Megatron roles (QKV column-parallel, O row-parallel).
+Three attention lowerings, dispatched per call (``_derive_dispatch``):
 
-  * **fused** (``mode="amsim"``, shape within the VMEM guards): the
+  * **sharded** (``mode="amsim"`` under an active mesh): the fused
+    one-launch kernel wrapped in shard_map — KV heads shard over
+    "model", batch over the data axes, each shard runs the kernel on
+    its block (``distributed/shard_fused``; REPRO_SHARD_FUSED=0 kills
+    it, docs/distributed.md has the routing table).
+  * **fused** (``mode="amsim"``, no ambient mesh, shape within the VMEM
+    guards): the
     one-launch Pallas kernel ``kernels/approx_attention.py`` — score ->
     mask -> softmax -> value in a single grid sweep, scores never
     materialised in HBM, fully-masked KV blocks skipped so
@@ -29,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.policy import NumericsPolicy
+from repro.distributed import shard_fused
 # NEG_INF is shared with the fused kernel and the einsum reference (one
 # constant — the fused/einsum bit-compatibility contract depends on it).
 from repro.kernels.common import attention_mask
@@ -82,9 +90,37 @@ def _wsc(x, *spec):
     return jax.lax.with_sharding_constraint(x, P(*spec))
 
 
+def _derive_dispatch(ap: NumericsPolicy, q_shape, k_shape, *, causal: bool,
+                     window: int) -> str:
+    """The three-way attention dispatch, decided once per call:
+
+      * "sharded" — an active mesh (``shard_fused.active_mesh``:
+        mode="amsim" under a ``with mesh:`` context, REPRO_SHARD_FUSED
+        not killed) whose axes divide batch/KV-heads and whose
+        per-shard shape passes the kernel guards: the one-launch kernel
+        runs per shard via shard_map (KV heads over "model", batch over
+        the data axes).
+      * "fused"   — no ambient mesh: the single-device one-launch
+        kernel (shape permitting, REPRO_ATTN_FUSED to kill).
+      * "einsum"  — everything else, including mesh-active shapes the
+        sharded path cannot take: the grouped-query einsum chain, which
+        GSPMD partitions natively.
+    """
+    mesh = shard_fused.active_mesh(ap)
+    if mesh is not None:
+        if shard_fused.attention_supported(ap, mesh, q_shape, k_shape,
+                                           causal=causal, window=window):
+            return "sharded"
+        return "einsum"
+    if fused_attention_enabled(ap, q_shape, k_shape, causal=causal,
+                               window=window):
+        return "fused"
+    return "einsum"
+
+
 def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
                      causal: bool, window: int, daxes,
-                     fused: bool | None = None):
+                     dispatch: str | None = None):
     """§Perf optimisation: repeat KV to full head count and shard the head
     axis over "model" with explicit constraints — keeps score/prob tensors
     sharded 1/TP instead of replicated (GSPMD often fails to propagate
@@ -93,10 +129,17 @@ def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
     KV = k.shape[2]
     G = H // KV
     ap = policy.for_attention()
-    if fused is None:  # direct callers: derive the dispatch locally
-        fused = jax.device_count() == 1 and fused_attention_enabled(
-            ap, q.shape, k.shape, causal=causal, window=window)
-    if fused:
+    if dispatch is None:  # direct callers: derive the dispatch locally
+        dispatch = _derive_dispatch(ap, q.shape, k.shape, causal=causal,
+                                    window=window)
+    if dispatch == "sharded":
+        # Head sharding is native to the sharded fused kernel (KV heads
+        # over "model"), on the original *grouped* K/V — the explicit
+        # repeat+constraint dance below exists only for the einsum path.
+        return shard_fused.sharded_attention(
+            q, k, v, q_pos, k_pos, ap, causal=causal, window=window,
+            mesh=shard_fused.active_mesh(ap))
+    if dispatch == "fused":
         # Single device: sharding constraints are no-ops, so the fused
         # one-launch kernel takes the call — on the original *grouped*
         # K/V (it folds G into its gather rows), skipping the G-fold
@@ -118,22 +161,26 @@ def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
 
 
 def _attend(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
-            causal: bool, window: int, fused: bool | None = None):
+            causal: bool, window: int, dispatch: str | None = None):
     """q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H,dh).
 
-    Dispatch: the fused one-launch kernel under ``mode="amsim"`` (shape
-    permitting, ``REPRO_ATTN_FUSED=0`` to kill), the grouped-query
-    einsum chain otherwise.  ``attention()`` passes the decision in
-    (``fused``) so the q-chunk-scan skip and the inner dispatch can
-    never disagree; direct callers may leave it None to self-derive.
-    k_pos holds the *absolute* position of every KV slot; negative
-    means unwritten (ring-buffer cache) and is masked out.
+    Dispatch (see ``_derive_dispatch``): the shard_map-wrapped fused
+    kernel under an active mesh, the single-device one-launch kernel,
+    or the grouped-query einsum chain.  ``attention()`` passes the
+    decision in (``dispatch``) so the q-chunk-scan skip and the inner
+    dispatch can never disagree; direct callers may leave it None to
+    self-derive.  k_pos holds the *absolute* position of every KV slot;
+    negative means unwritten (ring-buffer cache) and is masked out.
     """
     ap = policy.for_attention()
-    if fused is None:
-        fused = fused_attention_enabled(ap, q.shape, k.shape, causal=causal,
-                                        window=window)
-    if fused:
+    if dispatch is None:
+        dispatch = _derive_dispatch(ap, q.shape, k.shape, causal=causal,
+                                    window=window)
+    if dispatch == "sharded":
+        return shard_fused.sharded_attention(
+            q, k, v, q_pos, k_pos, ap, causal=causal, window=window,
+            mesh=shard_fused.active_mesh(ap))
+    if dispatch == "fused":
         return policy_attention(q, k, v, q_pos, k_pos, ap, causal, window)
     return attend_einsum(q, k, v, q_pos, k_pos, ap, causal=causal,
                          window=window)
@@ -151,11 +198,14 @@ def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
     """
     B, S, d = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = linear(p["wq"], x, policy).reshape(B, S, H, dh)
+    # QKV projections are column-parallel, the output projection below is
+    # row-parallel (sharding._RULES) — under an active mesh in amsim mode
+    # each runs the fused LUT kernel per shard (distributed/shard_fused).
+    q = linear(p["wq"], x, policy, kind="column").reshape(B, S, H, dh)
     src = x if kv_src is None else kv_src
     Tsrc = src.shape[1]
-    k = linear(p["wk"], src, policy).reshape(B, Tsrc, KV, dh)
-    v = linear(p["wv"], src, policy).reshape(B, Tsrc, KV, dh)
+    k = linear(p["wk"], src, policy, kind="column").reshape(B, Tsrc, KV, dh)
+    v = linear(p["wv"], src, policy, kind="column").reshape(B, Tsrc, KV, dh)
 
     start = cache["len"] if cache is not None else q_offset
     q_pos = start + jnp.arange(S, dtype=jnp.int32)
@@ -198,30 +248,36 @@ def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
     else:
         k_pos = jnp.arange(Tsrc, dtype=jnp.int32) if kv_src is not None else q_pos
 
-    # Fused-dispatch decision, made ONCE here and passed down: the fused
-    # one-launch kernel blocks q internally (its q-block grid axis), so
-    # the memory-side motivation for the q-chunk scan — bounding the
-    # materialised (B, KV, G, q_chunk, T) score tensor — vanishes and
-    # the scan collapses into the kernel.  Sharing one decision with
+    # Dispatch decision, made ONCE here and passed down: both kernel
+    # lowerings ("fused" single-device, "sharded" per-shard) block q
+    # internally (the q-block grid axis), so the memory-side motivation
+    # for the q-chunk scan — bounding the materialised
+    # (B, KV, G, q_chunk, T) score tensor — vanishes and the scan
+    # collapses into the kernel.  Sharing one decision with
     # _attend/_attend_fullhead means the scan skip and the inner
     # dispatch can never drift apart (skipping the scan while the inner
     # call fell back to einsum would rematerialise the full score
     # tensor the scan exists to bound).
-    fused = fused_attention_enabled(policy.for_attention(), q.shape, k.shape,
-                                    causal=causal, window=window) \
-        and (not cfg.shard_attn_heads or jax.device_count() == 1)
+    dispatch = _derive_dispatch(policy.for_attention(), q.shape, k.shape,
+                                causal=causal, window=window)
+    if dispatch == "fused" and cfg.shard_attn_heads \
+            and jax.device_count() > 1:
+        # Meshless multi-device + explicit head-sharding constraints:
+        # keep the einsum path (the constraints are the optimisation).
+        dispatch = "einsum"
+    in_kernel = dispatch != "einsum"
     if cfg.shard_attn_heads:
         attend = lambda qi, pi: _attend_fullhead(
             qi, k, v, pi, k_pos, policy, causal=causal, window=window,
-            fused=fused and qi.shape == q.shape,
+            dispatch=dispatch if qi.shape == q.shape else "einsum",
             daxes=(cfg.mesh_data_axes if len(cfg.mesh_data_axes) > 1
                    else cfg.mesh_data_axes[0]))
     else:
-        attend = lambda qi, pi: _attend(qi, k, v, pi, k_pos, policy,
-                                        causal=causal, window=window,
-                                        fused=fused and qi.shape == q.shape)
+        attend = lambda qi, pi: _attend(
+            qi, k, v, pi, k_pos, policy, causal=causal, window=window,
+            dispatch=dispatch if qi.shape == q.shape else "einsum")
     q_chunk = cfg.q_chunk if q_chunk is None else q_chunk
-    if S > q_chunk and S % q_chunk == 0 and not fused:
+    if S > q_chunk and S % q_chunk == 0 and not in_kernel:
         nc = S // q_chunk
         if cfg.unroll_attn_chunks:
             # Python-unrolled chunks: used by the dry-run so cost_analysis

@@ -7,6 +7,12 @@ AMDENSE analogue (paper §VI-C) generalised to the whole model zoo.
 Elementwise products (norm scales, activations) stay native: the paper's
 AMDENSE/AMCONV2D replace *GEMM* multiplies; norm/act multiplies are a
 vanishing fraction of FLOPs and are not in the paper's scope.
+
+``linear`` takes the layer's Megatron role (``kind`` = "column"/"row",
+mirroring ``distributed/sharding._RULES``) so that under an active mesh
+``mode="amsim"`` lowers to the per-shard fused LUT kernels via
+``distributed/shard_fused`` instead of GSPMD's replicated-kernel
+fallback (kill switch and knobs: docs/configuration.md).
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import NumericsPolicy
+from repro.distributed.shard_fused import parallel_matmul
 
 
 def init_linear(key, d_in: int, d_out: int, bias: bool = False, scale=None):
@@ -24,8 +31,8 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False, scale=None):
     return p
 
 
-def linear(p, x, policy: NumericsPolicy):
-    y = policy.matmul(x, p["w"])
+def linear(p, x, policy: NumericsPolicy, kind: str | None = None):
+    y = parallel_matmul(x, p["w"], policy, kind)
     if "b" in p:
         y = y + p["b"]
     return y
@@ -40,8 +47,10 @@ def embed(p, ids):
 
 
 def unembed(p, x, policy: NumericsPolicy):
-    """Tied LM head: x @ emb^T (a GEMM -> routed through the policy)."""
-    return policy.matmul(x, p["emb"].T)
+    """Tied LM head: x @ emb^T (a GEMM -> routed through the policy).
+    Vocab-parallel under the sharded fused path: emb^T's output dim is
+    the "model"-sharded vocab, i.e. a column-parallel matmul."""
+    return parallel_matmul(x, p["emb"].T, policy, "column")
 
 
 def init_rmsnorm(d: int):

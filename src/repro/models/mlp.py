@@ -23,10 +23,16 @@ def init_ffn(key, d: int, d_ff: int, act: str = "swiglu"):
 
 
 def ffn(p, x, policy: NumericsPolicy, act: str = "swiglu"):
+    # Megatron roles (sharding._RULES): wg/wu column-parallel, wd
+    # row-parallel — under an active mesh + mode="amsim" each lowers to
+    # the per-shard fused LUT kernel (distributed/shard_fused).
     if act == "swiglu":
         return linear(
             p["wd"],
-            jax.nn.silu(linear(p["wg"], x, policy)) * linear(p["wu"], x, policy),
-            policy,
+            jax.nn.silu(linear(p["wg"], x, policy, kind="column"))
+            * linear(p["wu"], x, policy, kind="column"),
+            policy, kind="row",
         )
-    return linear(p["wd"], jax.nn.gelu(linear(p["wu"], x, policy)), policy)
+    return linear(p["wd"], jax.nn.gelu(linear(p["wu"], x, policy,
+                                              kind="column")),
+                  policy, kind="row")

@@ -174,7 +174,8 @@ def lm_forward(params, tokens, cfg: ArchConfig, policy: NumericsPolicy, *,
     if cfg.tie_embeddings:
         logits = unembed(params["embed"], x, policy)
     else:
-        logits = linear(params["head"], x, policy)
+        # Vocab-parallel head (sharding._RULES: head/w -> ("F", "model")).
+        logits = linear(params["head"], x, policy, kind="column")
     if cfg.constrain_logits:
         # §Perf: vocab-parallel cross-entropy — keep logits sharded over
         # "model" through the loss (logsumexp reduces locally + tiny AR)

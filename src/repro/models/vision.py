@@ -8,7 +8,9 @@ Under ``policy.mode == "amsim"`` every conv here — stems, residual
 blocks, projections, LeNet-5 feature layers — lowers to the fused
 implicit-GEMM Pallas kernels of ``kernels/approx_conv.py`` (forward,
 dL/dx and dL/dw), so the paper's vision workloads run on the fast
-batched engine instead of materialised im2col + GEMM.
+batched engine instead of materialised im2col + GEMM.  Under an active
+mesh the batch additionally shards over the data axes and each shard
+runs the fused kernels locally (``distributed/shard_fused``).
 """
 from __future__ import annotations
 
@@ -17,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.paper_models import VisionConfig
 from repro.core.policy import NumericsPolicy
-from repro.kernels.ops import approx_conv2d
+from repro.distributed.shard_fused import parallel_conv2d
 from repro.models.layers import init_linear, linear
 
 
@@ -28,7 +30,7 @@ def _init_conv(key, kh, kw, cin, cout):
 
 
 def _conv(p, x, policy, stride=1, padding="SAME"):
-    return approx_conv2d(x, p["w"], stride, padding, policy) + p["b"]
+    return parallel_conv2d(x, p["w"], stride, padding, policy) + p["b"]
 
 
 def _avgpool(x, k=2):

@@ -11,9 +11,18 @@ in ``amsim`` mode rather than per-example maps, so serving under an
 approximate multiplier pays one kernel launch per contraction per step.
 KV caches are donated to the decode step off-CPU, making the ring-buffer
 update in-place instead of a copy per generated token.
+
+Sharded serving: pass ``mesh=`` and the engine places params with the
+Megatron/FSDP rules (``distributed/sharding``), shards the KV caches
+(batch over data axes, KV heads over "model" — the exact layout the
+sharded fused attention kernel consumes) and traces prefill/decode
+inside the mesh context, so ``mode="amsim"`` lowers per shard through
+``distributed/shard_fused`` (kill switch REPRO_SHARD_FUSED=0; see
+docs/configuration.md and docs/distributed.md).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional
 
 import jax
@@ -49,9 +58,16 @@ class ServingEngine:
     """Greedy batched generation driver over prefill + decode."""
 
     def __init__(self, cfg: ArchConfig, policy: NumericsPolicy,
-                 params, max_len: int = 512):
+                 params, max_len: int = 512, mesh=None):
         self.cfg, self.policy, self.params = cfg, policy, params
         self.max_len = max_len
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.distributed.sharding import (lm_param_pspecs,
+                                                    to_shardings)
+            self.params = jax.device_put(
+                params, to_shardings(lm_param_pspecs(params, cfg, mesh),
+                                     mesh))
         # Donate the cache argument so the per-token ring-buffer write is
         # in-place.  CPU ignores donation with a warning, so gate on
         # backend rather than donating unconditionally.
@@ -60,6 +76,18 @@ class ServingEngine:
                                donate_argnums=donate)
         self.step = jax.jit(make_serve_step(cfg, policy),
                             donate_argnums=donate)
+
+    def _ctx(self):
+        """Mesh context for tracing/executing: inside it, mode="amsim"
+        dispatches to the sharded fused kernels (shard_fused reads the
+        ambient mesh at trace time)."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _shard_caches(self, caches, batch: int):
+        from repro.distributed.sharding import cache_pspecs, to_shardings
+        return jax.device_put(
+            caches, to_shardings(cache_pspecs(caches, self.mesh, batch),
+                                 self.mesh))
 
     def generate(self, prompts, max_new_tokens: int = 32):
         """prompts: int32 (B, S) -> int32 (B, max_new_tokens).
@@ -72,18 +100,22 @@ class ServingEngine:
         B = prompts.shape[0]
         if max_new_tokens <= 0:
             return jnp.zeros((B, 0), jnp.int32)
-        caches = init_lm_caches(self.cfg, B, self.max_len)
-        nxt, caches = self.prefill(self.params, prompts, caches)
-        # Preallocated on-device token buffer instead of a growing
-        # per-token Python list + one big trailing concatenate: memory
-        # is bounded up front, and because the (B, max_new) int32 buffer
-        # stays on device the loop remains fully async-dispatchable —
-        # no host sync per token, one transfer when the caller reads the
-        # result.  The per-step dynamic_update_slice copies only the
-        # tiny token buffer, never the KV caches.
-        buf = jnp.zeros((B, max_new_tokens), jnp.int32)
-        buf = jax.lax.dynamic_update_slice(buf, nxt, (0, 0))
-        for i in range(1, max_new_tokens):
-            _, nxt, caches = self.step(self.params, nxt, caches)
-            buf = jax.lax.dynamic_update_slice(buf, nxt, (0, i))
+        with self._ctx():
+            caches = init_lm_caches(self.cfg, B, self.max_len)
+            if self.mesh is not None:
+                caches = self._shard_caches(caches, B)
+            nxt, caches = self.prefill(self.params, prompts, caches)
+            # Preallocated on-device token buffer instead of a growing
+            # per-token Python list + one big trailing concatenate:
+            # memory is bounded up front, and because the (B, max_new)
+            # int32 buffer stays on device the loop remains fully
+            # async-dispatchable — no host sync per token, one transfer
+            # when the caller reads the result.  The per-step
+            # dynamic_update_slice copies only the tiny token buffer,
+            # never the KV caches.
+            buf = jnp.zeros((B, max_new_tokens), jnp.int32)
+            buf = jax.lax.dynamic_update_slice(buf, nxt, (0, 0))
+            for i in range(1, max_new_tokens):
+                _, nxt, caches = self.step(self.params, nxt, caches)
+                buf = jax.lax.dynamic_update_slice(buf, nxt, (0, i))
         return buf

@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Docs lint: dead-link check + env-var reference sync (CI docs job).
+
+Two checks, stdlib only (run from the repo root, or pass it as argv[1]):
+
+1. **Links** — every relative markdown link in README.md and docs/*.md
+   must resolve to an existing file (anchors stripped; http/mailto
+   skipped).  Docs that point at moved/renamed files fail the build.
+2. **Env vars** — every ``REPRO_*`` variable read anywhere in the
+   Python tree (src/, tests/, benchmarks/, examples/) must be
+   documented in docs/configuration.md, and every variable documented
+   there must still exist in the code.  Docs rot fails the build in
+   both directions.
+
+Exit status: 0 clean, 1 with findings (printed one per line).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ENV_RE = re.compile(r"\bREPRO_[A-Z][A-Z0-9_]*\b")
+# [text](target) — but not images' inner parens or footnote refs.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PY_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def md_files(root: Path):
+    yield root / "README.md"
+    yield from sorted((root / "docs").glob("*.md"))
+
+
+def check_links(root: Path) -> list[str]:
+    errors = []
+    for md in md_files(root):
+        if not md.exists():
+            errors.append(f"{md.relative_to(root)}: file missing")
+            continue
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1).split("#")[0]
+            if not target or target.startswith(("http://", "https://",
+                                               "mailto:")):
+                continue
+            resolved = (md.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}: dead link "
+                              f"-> {m.group(1)}")
+    return errors
+
+
+def env_vars_in(paths) -> set[str]:
+    found = set()
+    for p in paths:
+        found.update(ENV_RE.findall(p.read_text(errors="ignore")))
+    return found
+
+
+def check_env_sync(root: Path) -> list[str]:
+    conf = root / "docs" / "configuration.md"
+    if not conf.exists():
+        return ["docs/configuration.md missing"]
+    documented = set(ENV_RE.findall(conf.read_text()))
+    py = [p for d in PY_DIRS for p in (root / d).rglob("*.py")
+          if "__pycache__" not in p.parts and p.name != "check_docs.py"]
+    used = env_vars_in(py)
+    errors = []
+    for var in sorted(used - documented):
+        errors.append(f"docs/configuration.md: {var} is read in the code "
+                      f"but not documented")
+    for var in sorted(documented - used):
+        errors.append(f"docs/configuration.md: {var} is documented but "
+                      f"never read in the code")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    root = root.resolve()
+    errors = check_links(root) + check_env_sync(root)
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        n = sum(1 for _ in md_files(root))
+        print(f"docs OK: {n} markdown files, links + env-var reference "
+              f"in sync")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
