@@ -21,9 +21,10 @@ sys.path.insert(0, str(_ROOT / "src"))
 
 
 def _sections(smoke: bool):
-    # Smoke (the CI gate) imports only the three engine benches; an
+    # Smoke (the CI gate) imports only the engine benches; an
     # import-time error in an unused full-run module must not brick it.
-    from benchmarks import bench_attention, bench_batched_gemm, bench_conv2d
+    from benchmarks import (bench_attention, bench_batched_gemm,
+                            bench_conv2d, bench_policy_table)
 
     if smoke:
         return [
@@ -33,6 +34,8 @@ def _sections(smoke: bool):
              lambda: bench_conv2d.main(smoke=True)),
             ("Fused approx-attention engine (smoke)",
              lambda: bench_attention.main(smoke=True)),
+            ("Policy-table overhead (smoke)",
+             lambda: bench_policy_table.main(smoke=True)),
         ]
     from benchmarks import (
         bench_convergence,
@@ -49,6 +52,7 @@ def _sections(smoke: bool):
         ("Batched approx-GEMM engine", bench_batched_gemm.main),
         ("Fused approx-conv2d engine", bench_conv2d.main),
         ("Fused approx-attention engine", bench_attention.main),
+        ("Policy-table overhead", bench_policy_table.main),
         ("Fig.10/Table III convergence & accuracy", bench_convergence.main),
         ("Table IV cross-format matrix", bench_crossformat.main),
         ("Fig.11 pruning x multipliers", bench_pruning.main),

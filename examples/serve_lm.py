@@ -10,8 +10,9 @@ Run:  PYTHONPATH=src python examples/serve_lm.py --new-tokens 24
 
 Mode matrix: native | surrogate | amsim (fused LUT kernels; with
 ``--mesh`` they run per shard via distributed/shard_fused) | amsim_jnp
-(default here — portable oracle) | direct.  See docs/numerics.md,
-docs/distributed.md and docs/configuration.md.
+(default here — portable oracle) | direct.  ``--numerics`` also accepts
+a per-site policy-table JSON path (docs/policies.md).  See
+docs/numerics.md, docs/distributed.md and docs/configuration.md.
 """
 import argparse
 import time
@@ -20,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced
-from repro.core.policy import MODES, NumericsPolicy
+from repro.core.policy import MODES, load_numerics
 from repro.launch.mesh import make_debug_mesh
 from repro.models.transformer import init_lm
 from repro.serve.engine import ServingEngine
@@ -32,9 +33,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=24)
-    ap.add_argument("--numerics", default="amsim_jnp", choices=MODES,
-                    help="native | surrogate | amsim | amsim_jnp | direct "
-                         "(docs/numerics.md)")
+    ap.add_argument("--numerics", default="amsim_jnp",
+                    help=f"one of {'|'.join(MODES)} (docs/numerics.md), or "
+                         "a per-site policy-table JSON path "
+                         "(docs/policies.md)")
     ap.add_argument("--multiplier", default="afm16")
     ap.add_argument("--mesh", action="store_true",
                     help="serve on a 2x2 debug mesh (needs >= 4 devices; "
@@ -43,8 +45,7 @@ def main():
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
-    policy = (NumericsPolicy() if args.numerics == "native" else
-              NumericsPolicy(mode=args.numerics, multiplier=args.multiplier))
+    policy = load_numerics(args.numerics, args.multiplier)
     params = init_lm(jax.random.PRNGKey(0), cfg)
     mesh = make_debug_mesh(2, 2) if args.mesh else None
     engine = ServingEngine(cfg, policy, params,

@@ -17,7 +17,10 @@ Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
 Mode matrix: native (exact f32) | surrogate (truncate + MXU) | amsim
 (fused LUT kernels; sharded per shard under a mesh — use
 launch/train.py for the mesh driver) | amsim_jnp (jnp oracle) | direct
-(bit-level model).  See docs/numerics.md and docs/configuration.md.
+(bit-level model).  ``--numerics`` also accepts a policy-table JSON
+path for heterogeneous per-site numerics (e.g. ``--numerics
+table.json``; schema + sweep runner in docs/policies.md).  See
+docs/numerics.md and docs/configuration.md.
 """
 import argparse
 import dataclasses
@@ -26,7 +29,7 @@ import jax
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
-from repro.core.policy import MODES, NumericsPolicy
+from repro.core.policy import MODES, load_numerics
 from repro.data.pipeline import lm_batch
 from repro.models.transformer import init_lm, lm_loss
 from repro.optim.optimizers import cosine_schedule, make_optimizer
@@ -43,9 +46,10 @@ def main():
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--numerics", default="native", choices=MODES,
-                    help="native | surrogate | amsim | amsim_jnp | direct "
-                         "(docs/numerics.md)")
+    ap.add_argument("--numerics", default="native",
+                    help=f"one of {'|'.join(MODES)} (docs/numerics.md), or "
+                         "a per-site policy-table JSON path "
+                         "(docs/policies.md)")
     ap.add_argument("--multiplier", default="fp32",
                     help="multiplier model for non-native modes "
                          "(bf16, afm16, mitchell8, exact7, ...)")
@@ -61,8 +65,7 @@ def main():
     print(f"model: {n/1e6:.1f}M params, {args.steps} steps, "
           f"batch {args.batch} x seq {args.seq}")
 
-    policy = (NumericsPolicy() if args.numerics == "native" else
-              NumericsPolicy(mode=args.numerics, multiplier=args.multiplier))
+    policy = load_numerics(args.numerics, args.multiplier)
     params = init_lm(jax.random.PRNGKey(0), cfg)
     opt = make_optimizer("adamw", cosine_schedule(args.lr, 20, args.steps))
     opt_state = opt.init(params)

@@ -1,8 +1,11 @@
-"""NumericsPolicy — the framework-wide dispatch point for multiplications.
+"""Numerics policies — the framework-wide dispatch point for multiplications.
 
 This is the JAX/TPU analogue of the paper's AMDENSE/AMCONV2D drop-in ops
-(§VI): every matmul in every model layer goes through ``policy.matmul``,
-which routes to one of five execution modes:
+(§VI) generalised to *heterogeneous per-site numerics*: every GEMM, conv
+and attention contraction in every model layer is labelled with a **site**
+(its layer role — ``qkv``, ``wd``, ``conv``, ``attn_score``, ...) and the
+policy decides, per ``(site, op_family, pass)``, which execution mode and
+approximate multiplier that multiply runs under:
 
   native      exact f32, XLA-native dot -> MXU.  (the "TFnG" baseline)
   surrogate   operands mantissa-truncated to M bits, then native MXU dot.
@@ -17,25 +20,103 @@ which routes to one of five execution modes:
   direct      direct bit-manipulation simulation of the multiplier model
               in jnp (the paper's "direct C simulation" baseline, Fig. 6).
 
-Accumulation is always FP32 (paper §VII).  The policy object is a small
-frozen dataclass so it can be a static argument under jit; LUTs are
-fetched from a process-level cache at trace time and embedded as
-constants (64 KiB for M=7).
+Two policy forms, both frozen/hashable (static args under jit — resolved
+leaves are trace-time constants, so a fixed table never retraces):
+
+* :class:`NumericsPolicy` — the flat form: one ``(mode, multiplier)``
+  pair applied everywhere, with the legacy ``approx_attention`` /
+  ``approx_backward`` switches.  Its :meth:`NumericsPolicy.resolve`
+  implements those switches as compiled-in default rules.
+* :class:`PolicyTable` — the hierarchical form: an ordered set of
+  :class:`PolicyRule` entries mapping ``(site, family, pass)`` patterns
+  (``None`` = wildcard) to ``(mode, multiplier)``, resolved
+  most-specific-wins.  This is the per-layer-assignment axis of AdaPT /
+  Li et al. as a first-class subsystem: ``dx`` and ``dw`` can differ
+  (e.g. exact weight gradients, approximate activation gradients), conv
+  can run a different multiplier than the LM head, and so on.
+
+``resolve(site, family, pass_)`` on either form returns a flat *leaf*
+policy consumed by the kernels (``kernels/ops.py`` is the single seam).
+Accumulation is always FP32 (paper §VII); LUTs are fetched from a
+process-level cache at trace time and embedded as constants.
+
+Schema, precedence and the sweep-runner workflow: docs/policies.md.
 """
 from __future__ import annotations
 
 import dataclasses
-
-import jax.numpy as jnp
+import json
 
 from .multipliers import get_multiplier
 
 MODES = ("native", "surrogate", "amsim", "amsim_jnp", "direct")
 
+# Op families and backward passes a rule can target.  ``fwd`` is the
+# forward contraction; ``dx`` the activation-gradient GEMMs (paper
+# Fig. 8c); ``dw`` the weight-gradient GEMMs (Fig. 8b).
+FAMILIES = ("gemm", "conv", "attention")
+PASSES = ("fwd", "dx", "dw")
+
+# The site registry: every named multiply site in models/.  Sites are
+# threaded from the call sites (models/attention.py, mlp.py, moe.py,
+# vision.py, transformer.py, encdec.py, ssm.py) down to kernels/ops.py.
+# docs/policies.md documents this list and tools/check_docs.py keeps the
+# two in sync BOTH ways.
+SITES = (
+    "qkv",         # attention Q/K/V projections (column-parallel)
+    "wo",          # attention output projection (row-parallel)
+    "wg",          # FFN gate projection (column-parallel)
+    "wu",          # FFN up projection (column-parallel)
+    "wd",          # FFN down projection (row-parallel)
+    "router",      # MoE router logits
+    "head",        # LM / classifier head
+    "unembed",     # tied LM head (embedding transpose)
+    "dense",       # vision MLP hidden dense layers
+    "ssm",         # Mamba2 projections + SSD einsums
+    "conv",        # conv2d layers (family: conv)
+    "attn_score",  # attention Q.K^T contraction (family: attention)
+    "attn_value",  # attention probs.V contraction (family: attention)
+)
+
+# Family implied by each site; sites not listed are plain GEMMs.
+_SITE_FAMILY = {"conv": "conv", "attn_score": "attention",
+                "attn_value": "attention"}
+
+
+def site_family(site: str | None) -> str:
+    """The op family a site belongs to (``gemm`` unless conv/attention)."""
+    return _SITE_FAMILY.get(site, "gemm")
+
+
+def _check_query(site, family, pass_):
+    if site is not None and site not in SITES:
+        raise ValueError(f"unknown site {site!r}; registry: {SITES}")
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}; have {FAMILIES}")
+    if pass_ not in PASSES:
+        raise ValueError(f"unknown pass {pass_!r}; have {PASSES}")
+
+
+def _check_mode_multiplier(mode: str, multiplier: str):
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    if mode != "native":
+        m = get_multiplier(multiplier)  # validates the name
+        if mode == "surrogate" and not m.exact_family:
+            raise ValueError(
+                f"surrogate mode is only numerics-equivalent for the "
+                f"truncation family; {m.name} is log-based — use amsim/direct"
+            )
+
 
 @dataclasses.dataclass(frozen=True)
 class NumericsPolicy:
-    """Numerics configuration threaded through every model layer."""
+    """Flat numerics configuration: one (mode, multiplier) everywhere.
+
+    Also the *leaf* type returned by ``resolve`` on either policy form —
+    the object the kernels actually consume (``mode`` / ``multiplier`` /
+    ``is_native``).
+    """
 
     mode: str = "native"
     multiplier: str = "fp32"
@@ -47,15 +128,7 @@ class NumericsPolicy:
     approx_backward: bool = True
 
     def __post_init__(self):
-        if self.mode not in MODES:
-            raise ValueError(f"mode {self.mode!r} not in {MODES}")
-        if self.mode != "native":
-            m = get_multiplier(self.multiplier)  # validates
-            if self.mode == "surrogate" and not m.exact_family:
-                raise ValueError(
-                    f"surrogate mode is only numerics-equivalent for the "
-                    f"truncation family; {m.name} is log-based — use amsim/direct"
-                )
+        _check_mode_multiplier(self.mode, self.multiplier)
 
     # ------------------------------------------------------------- helpers
     @property
@@ -66,38 +139,372 @@ class NumericsPolicy:
     def is_native(self) -> bool:
         return self.mode == "native" or self.multiplier in ("fp32", "exact23")
 
-    def for_attention(self) -> "NumericsPolicy":
-        """Policy used inside attention: native if approx_attention=False."""
-        if self.approx_attention or self.is_native:
-            return self
-        return dataclasses.replace(self, mode="native")
+    # ------------------------------------------------------------- resolve
+    def resolve(self, site: str | None = None, family: str | None = None,
+                pass_: str = "fwd") -> "NumericsPolicy":
+        """Leaf numerics at ``(site, family, pass_)``.
+
+        The legacy flags act as compiled-in default rules: with
+        ``approx_attention=False`` the attention family resolves native;
+        with ``approx_backward=False`` the ``dx``/``dw`` passes do.
+        """
+        family = site_family(site) if family is None else family
+        _check_query(site, family, pass_)
+        leaf = self
+        if family == "attention" and not (self.approx_attention
+                                          or self.is_native):
+            leaf = dataclasses.replace(leaf, mode="native")
+        if pass_ != "fwd" and not self.approx_backward:
+            leaf = dataclasses.replace(leaf, mode="native")
+        return leaf
+
+    def as_table(self) -> "PolicyTable":
+        """The equivalent explicit :class:`PolicyTable` (the flags become
+        default rules; ``resolve`` agrees cell-for-cell)."""
+        rules = [PolicyRule(self.mode, self.multiplier)]
+        if not (self.approx_attention or self.is_native):
+            rules.append(PolicyRule("native", self.multiplier,
+                                    family="attention"))
+        if not self.approx_backward:
+            rules += [PolicyRule("native", self.multiplier, pass_="dx"),
+                      PolicyRule("native", self.multiplier, pass_="dw")]
+            if not (self.approx_attention or self.is_native):
+                rules += [PolicyRule("native", self.multiplier,
+                                     family="attention", pass_="dx"),
+                          PolicyRule("native", self.multiplier,
+                                     family="attention", pass_="dw")]
+        return PolicyTable(tuple(rules))
 
     # ------------------------------------------------------------- dispatch
-    def matmul(self, a, b):
+    def matmul(self, a, b, site: str | None = None):
         """Batched matmul  (..., m, k) @ (..., k, n) -> (..., m, n).
 
-        Differentiable; in approx modes the backward pass also uses
-        approximate multiplies (custom_vjp in kernels/ops.py) unless
-        ``approx_backward`` is False.
+        Differentiable; backward GEMMs run under the ``dx``/``dw``
+        resolutions (custom_vjp in kernels/ops.py).
         """
         from repro.kernels.ops import policy_matmul  # local: avoid cycle
 
-        return policy_matmul(a, b, self)
+        return policy_matmul(a, b, self, site)
 
-    def einsum(self, spec: str, a, b):
+    def einsum(self, spec: str, a, b, site: str | None = None):
         """Einsum routed through the policy.
 
-        Native mode lowers to jnp.einsum directly; approx modes support
-        any spec expressible as a batched matmul (rewritten via
+        Native resolutions lower to jnp.einsum directly; approx modes
+        support any spec expressible as a batched matmul (rewritten via
         reshape/transpose by kernels/ops.py).
         """
         from repro.kernels.ops import policy_einsum
 
-        return policy_einsum(spec, a, b, self)
+        return policy_einsum(spec, a, b, self, site)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """One table rule: a ``(site, family, pass)`` pattern (None =
+    wildcard) mapped to ``(mode, multiplier)``."""
+
+    mode: str
+    multiplier: str = "fp32"
+    site: str | None = None
+    family: str | None = None
+    pass_: str | None = None
+
+    def __post_init__(self):
+        _check_mode_multiplier(self.mode, self.multiplier)
+        if self.site is not None and self.site not in SITES:
+            raise ValueError(f"unknown site {self.site!r}; registry: {SITES}")
+        if self.family is not None and self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.pass_ is not None and self.pass_ not in PASSES:
+            raise ValueError(f"unknown pass {self.pass_!r}")
+        if (self.site is not None and self.family is not None
+                and self.family != site_family(self.site)):
+            raise ValueError(
+                f"rule can never match: site {self.site!r} belongs to "
+                f"family {site_family(self.site)!r}, not {self.family!r}")
+
+    # pattern key + specificity -------------------------------------------
+    @property
+    def key(self):
+        return (self.site, self.family, self.pass_)
+
+    @property
+    def specificity(self) -> int:
+        """site outweighs family outweighs pass; the score uniquely
+        encodes WHICH fields are set, so two distinct rules that match
+        the same query can never tie (duplicate patterns are rejected at
+        table construction)."""
+        return ((4 if self.site is not None else 0)
+                + (2 if self.family is not None else 0)
+                + (1 if self.pass_ is not None else 0))
+
+    def matches(self, site, family, pass_) -> bool:
+        return ((self.site is None or self.site == site)
+                and (self.family is None or self.family == family)
+                and (self.pass_ is None or self.pass_ == pass_))
+
+    def leaf(self) -> NumericsPolicy:
+        return NumericsPolicy(mode=self.mode, multiplier=self.multiplier)
+
+    def describe(self) -> str:
+        pat = ", ".join(f"{k}={v if v is not None else '*'}"
+                        for k, v in zip(("site", "family", "pass"), self.key))
+        tgt = self.mode if self.mode == "native" else \
+            f"{self.mode}/{self.multiplier}"
+        return f"({pat}) -> {tgt}"
+
+
+# Every query the model zoo can actually issue: the per-site cells plus
+# the site=None (unlabelled call) cells per family.  Construction-time
+# totality is checked against exactly this set.
+_ALL_QUERIES = tuple(
+    [(s, site_family(s), p) for s in SITES for p in PASSES]
+    + [(None, f, p) for f in FAMILIES for p in PASSES]
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyTable:
+    """Hierarchical per-site numerics: most-specific-wins rule table.
+
+    Construction validates every rule (mode/multiplier/surrogate-family
+    checks), rejects duplicate patterns (which would make resolution
+    order-dependent) and requires *total coverage* — every possible
+    ``(site, family, pass)`` query must match at least one rule, which in
+    practice means tables carry a full-wildcard default rule.
+
+    Frozen and hashable: a table is a static argument under jit, and the
+    leaves it resolves to are trace-time constants — switching tables
+    retraces once, per-step execution never does.
+    """
+
+    rules: tuple[PolicyRule, ...]
+
+    def __post_init__(self):
+        rules = tuple(self.rules)
+        object.__setattr__(self, "rules", rules)
+        if not rules:
+            raise ValueError("PolicyTable needs at least one rule")
+        seen = {}
+        for r in rules:
+            if not isinstance(r, PolicyRule):
+                raise TypeError(f"rules must be PolicyRule, got {type(r)}")
+            if r.key in seen:
+                raise ValueError(
+                    f"conflicting rules for pattern {r.key}: "
+                    f"{seen[r.key].describe()} vs {r.describe()}")
+            seen[r.key] = r
+        uncovered = [q for q in _ALL_QUERIES
+                     if not any(r.matches(*q) for r in rules)]
+        if uncovered:
+            raise ValueError(
+                f"table does not cover {len(uncovered)} cells, e.g. "
+                f"(site, family, pass)={uncovered[0]}; add a default "
+                f"wildcard rule (site=family=pass=None)")
+
+    # ------------------------------------------------------------- resolve
+    def resolve(self, site: str | None = None, family: str | None = None,
+                pass_: str = "fwd") -> NumericsPolicy:
+        """Most-specific matching rule's leaf.  Deterministic (duplicate
+        patterns rejected at construction ⇒ a strict specificity maximum
+        exists among matches) and total (coverage checked at
+        construction ⇒ some rule always matches)."""
+        family = site_family(site) if family is None else family
+        _check_query(site, family, pass_)
+        best = None
+        for r in self.rules:
+            if r.matches(site, family, pass_) and (
+                    best is None or r.specificity > best.specificity):
+                best = r
+        assert best is not None  # construction guarantees coverage
+        return best.leaf()
+
+    def winning_rule(self, site=None, family=None, pass_="fwd") -> PolicyRule:
+        """The rule ``resolve`` would pick (for reporting/debugging)."""
+        family = site_family(site) if family is None else family
+        _check_query(site, family, pass_)
+        return max((r for r in self.rules if r.matches(site, family, pass_)),
+                   key=lambda r: r.specificity)
+
+    # ------------------------------------------------------------- dispatch
+    def matmul(self, a, b, site: str | None = None):
+        from repro.kernels.ops import policy_matmul  # local: avoid cycle
+
+        return policy_matmul(a, b, self, site)
+
+    def einsum(self, spec: str, a, b, site: str | None = None):
+        from repro.kernels.ops import policy_einsum
+
+        return policy_einsum(spec, a, b, self, site)
+
+    # ------------------------------------------------------------- IO
+    def to_json(self) -> dict:
+        """JSON-able dict (docs/policies.md documents the schema)."""
+        def rule_obj(r: PolicyRule):
+            o = {"mode": r.mode}
+            if r.mode != "native":
+                o["multiplier"] = r.multiplier
+            if r.site is not None:
+                o["site"] = r.site
+            if r.family is not None:
+                o["family"] = r.family
+            if r.pass_ is not None:
+                o["pass"] = r.pass_
+            return o
+
+        return {"version": 1, "rules": [rule_obj(r) for r in self.rules]}
+
+    def describe(self) -> list[str]:
+        """One line per rule, most specific first (the ``_describe_
+        numerics`` path report in launch/train.py prints these)."""
+        order = sorted(self.rules, key=lambda r: (-r.specificity, r.key[0]
+                                                  or "", r.key[1] or "",
+                                                  r.key[2] or ""))
+        return [r.describe() for r in order]
 
 
 NATIVE = NumericsPolicy()
 
+# Either policy form; every dispatch seam accepts both.
+Numerics = NumericsPolicy | PolicyTable
+
 
 def policy_from_flags(mode: str = "native", multiplier: str = "fp32", **kw) -> NumericsPolicy:
     return NumericsPolicy(mode=mode, multiplier=multiplier, **kw)
+
+
+# =====================================================================
+# Table construction: JSON files and --assign shorthand
+# =====================================================================
+
+def _rule_from_obj(obj: dict, where: str) -> PolicyRule:
+    extra = set(obj) - {"mode", "multiplier", "site", "family", "pass"}
+    if extra:
+        raise ValueError(f"{where}: unknown rule keys {sorted(extra)}")
+    if "mode" not in obj:
+        raise ValueError(f"{where}: rule needs a 'mode'")
+    return PolicyRule(mode=obj["mode"], multiplier=obj.get("multiplier", "fp32"),
+                      site=obj.get("site"), family=obj.get("family"),
+                      pass_=obj.get("pass"))
+
+
+def table_from_json(src) -> PolicyTable:
+    """Build a table from a JSON file path or an already-parsed dict.
+
+    Schema (docs/policies.md)::
+
+        {"version": 1,
+         "default": {"mode": "amsim", "multiplier": "afm10"},
+         "rules": [{"site": "conv", "mode": "amsim",
+                    "multiplier": "mitchell8"},
+                   {"pass": "dw", "mode": "native"}]}
+
+    ``default`` is sugar for a full-wildcard rule.
+    """
+    if not isinstance(src, dict):
+        with open(src) as f:
+            src = json.load(f)
+    if not isinstance(src, dict):
+        raise ValueError("policy-table JSON must be an object")
+    if src.get("version", 1) != 1:
+        raise ValueError(f"unsupported policy-table version {src.get('version')!r}")
+    rules = []
+    if "default" in src:
+        d = dict(src["default"])
+        for k in ("site", "family", "pass"):
+            if d.get(k) is not None:
+                raise ValueError("'default' must be a wildcard rule")
+        rules.append(_rule_from_obj(d, "default"))
+    for i, obj in enumerate(src.get("rules", [])):
+        rules.append(_rule_from_obj(obj, f"rules[{i}]"))
+    return PolicyTable(tuple(rules))
+
+
+def _parse_target(value: str, default_mode: str) -> tuple[str, str]:
+    """'native' | '<multiplier>' | '<mode>:<multiplier>' -> (mode, mult)."""
+    if value == "native":
+        return "native", "fp32"
+    if ":" in value:
+        mode, mult = value.split(":", 1)
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r} in assignment {value!r}")
+        return mode, mult
+    return default_mode, value
+
+
+def table_from_assignments(spec: str, *, default: tuple[str, str] | None = None,
+                           default_mode: str = "amsim") -> PolicyTable:
+    """Build a table from CLI shorthand like
+    ``"conv=mitchell8,attn_score=bf16,dw=native,default=afm10"``.
+
+    Keys are site names, family names, pass names, ``default``, or a
+    combined ``<site-or-family>.<pass>`` (e.g. ``qkv.dw=native``);
+    values are ``native``, a multiplier name (mode = ``default_mode``,
+    i.e. the fused LUT kernels), or an explicit ``mode:multiplier``.
+    ``default=`` (or the ``default`` argument) supplies the wildcard
+    rule; without either, unassigned sites run native.
+
+    Precedence caveat (docs/policies.md): site rules outrank pass
+    rules, so in ``"qkv=mitchell8,dw=native"`` the qkv site's dw pass
+    runs mitchell8 — the ``dw=native`` rule covers only sites without
+    their own assignment.  Use ``qkv.dw=native`` to pin a specific
+    site's pass.
+    """
+    rules = []
+    saw_default = False
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        if "=" not in part:
+            raise ValueError(f"assignment {part!r} is not key=value")
+        key, value = (s.strip() for s in part.split("=", 1))
+        mode, mult = _parse_target(value, default_mode)
+        if key == "default":
+            rules.append(PolicyRule(mode, mult))
+            saw_default = True
+        elif "." in key:
+            base, pas = key.split(".", 1)
+            if pas not in PASSES:
+                raise ValueError(f"unknown pass {pas!r} in key {key!r}; "
+                                 f"have {PASSES}")
+            if base in SITES:
+                rules.append(PolicyRule(mode, mult, site=base, pass_=pas))
+            elif base in FAMILIES:
+                rules.append(PolicyRule(mode, mult, family=base, pass_=pas))
+            else:
+                raise ValueError(f"unknown site/family {base!r} in key "
+                                 f"{key!r}")
+        elif key in SITES:
+            rules.append(PolicyRule(mode, mult, site=key))
+        elif key in FAMILIES:
+            rules.append(PolicyRule(mode, mult, family=key))
+        elif key in PASSES:
+            rules.append(PolicyRule(mode, mult, pass_=key))
+        else:
+            raise ValueError(
+                f"unknown assignment key {key!r}: not a site {SITES}, "
+                f"family {FAMILIES}, pass {PASSES}, "
+                f"'<site>.<pass>', or 'default'")
+    if not saw_default:
+        if default is not None:
+            rules.append(PolicyRule(*default))
+        else:
+            rules.append(PolicyRule("native", "fp32"))
+    return PolicyTable(tuple(rules))
+
+
+def load_numerics(numerics: str, multiplier: str = "fp32", **kw) -> Numerics:
+    """CLI helper: ``numerics`` is a mode name (flat policy with
+    ``multiplier``) or a path to a policy-table JSON file.  Anything
+    that looks like a path (``.json`` suffix or a path separator) loads
+    as a table; anything else must be a known mode — the error message
+    names both options, since argparse no longer ``choices``-validates."""
+    import os
+
+    if numerics.endswith(".json") or os.sep in numerics:
+        return table_from_json(numerics)
+    if numerics not in MODES:
+        raise ValueError(
+            f"--numerics must be one of {'|'.join(MODES)} or a policy-table "
+            f"JSON path (docs/policies.md); got {numerics!r}")
+    if numerics == "native":
+        return NumericsPolicy(**kw)
+    return NumericsPolicy(mode=numerics, multiplier=multiplier, **kw)

@@ -45,6 +45,14 @@ device (64 KiB canonical / 32 KiB packed; sharding a table this small
 would trade a broadcast for a gather per *multiply*).  Nothing in this
 module ever gives the LUT a non-trivial PartitionSpec.
 
+Per-site numerics: every wrapper takes a flat policy or a PolicyTable
+plus the call's ``site`` label and resolves the per-pass leaves at
+trace time — the fwd leaf inside the shard_map bodies, the dx/dw
+leaves inside the custom VJPs — so heterogeneous tables survive the
+sharded dispatch with the collectives unchanged (they are
+pass-independent).  The sharded path engages on the *forward* leaf
+being amsim; see docs/policies.md for the mixed-pass fallback rules.
+
 Kill switch: ``REPRO_SHARD_FUSED=0`` disables the dispatch entirely —
 ``mode="amsim"`` then falls back to GSPMD's replicated-kernel lowering
 (see docs/configuration.md for every ``REPRO_*`` knob).
@@ -60,10 +68,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import Numerics, NumericsPolicy
 from repro.kernels.ops import (_conv_bwd, _conv_fwd_impl, _matmul_nograd,
-                               bwd_policy, fused_attention_enabled,
-                               policy_attention)
+                               fused_attention_enabled, policy_attention)
 
 _KINDS = ("column", "row")
 
@@ -88,11 +95,13 @@ def current_mesh() -> Mesh | None:
     return m
 
 
-def active_mesh(policy: NumericsPolicy) -> Mesh | None:
+def active_mesh(leaf: NumericsPolicy) -> Mesh | None:
     """The mesh to shard fused kernels over, or None when the dispatch
     must not engage (wrong mode, kill switch, no/trivial mesh, no
-    "model" axis)."""
-    if policy.mode != "amsim" or policy.is_native:
+    "model" axis).  ``leaf`` is a flat policy or an already-resolved
+    per-site leaf — the *forward* leaf decides whether the sharded
+    dispatch engages (see docs/policies.md for the mixed-pass rules)."""
+    if leaf.mode != "amsim" or leaf.is_native:
         return None
     if not env_enabled():
         return None
@@ -136,17 +145,17 @@ def _swap(x):
     return jnp.swapaxes(x, -1, -2)
 
 
-def _dw_psum(x, g, bp, mesh, sx, so, sw, bentry):
+def _dw_psum(x, g, leaf_dw, mesh, sx, so, sw, bentry):
     """Weight gradient shared by both matmul roles: fold every batch row
     into the contraction (dw = x_flat^T @ g_flat, ops._mm_bwd's weight
-    formula) per shard, psum over the data axes iff those rows were
-    sharded.  One definition so the column/row backward paths can never
-    diverge."""
+    formula) per shard under the resolved ``dw`` leaf, psum over the
+    data axes iff those rows were sharded.  One definition so the
+    column/row backward paths can never diverge."""
     daxes = _daxes(mesh)
 
     def dw_body(xs, gs):
         k, n = xs.shape[-1], gs.shape[-1]
-        dws = _matmul_nograd(xs.reshape(-1, k).T, gs.reshape(-1, n), bp)
+        dws = _matmul_nograd(xs.reshape(-1, k).T, gs.reshape(-1, n), leaf_dw)
         return jax.lax.psum(dws, daxes) if bentry is not None else dws
 
     return shard_map(dw_body, mesh=mesh, in_specs=(sx, so), out_specs=sw,
@@ -173,8 +182,9 @@ def matmul_supported(kind: str, x_shape, w_shape, mesh: Mesh) -> bool:
     return k % msize == 0 and k >= msize  # row
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def column_parallel_matmul(x, w, policy: NumericsPolicy, mesh: Mesh):
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def column_parallel_matmul(x, w, policy: Numerics, mesh: Mesh,
+                           site: str | None = None):
     """x (..., m, k) @ w (k, n) with n sharded over "model".
 
     Forward is collective-free: each shard's LUT kernel computes its
@@ -182,8 +192,10 @@ def column_parallel_matmul(x, w, policy: NumericsPolicy, mesh: Mesh):
     split).  The custom VJP places the Megatron collectives explicitly —
     autodiff through a ``check_rep=False`` shard_map would silently drop
     the psum over unmentioned mesh axes (dw's data-axis reduction).
+    ``site`` resolves the per-pass leaves (fwd here, dx/dw in the VJP);
+    the collectives themselves are pass-independent.
     """
-    return _col_fwd(x, w, policy, mesh)[0]
+    return _col_fwd(x, w, policy, mesh, site)[0]
 
 
 def _col_specs(mesh, xdim, bentry):
@@ -192,37 +204,40 @@ def _col_specs(mesh, xdim, bentry):
     return sx, P(None, "model"), so
 
 
-def _col_fwd(x, w, policy, mesh):
+def _col_fwd(x, w, policy, mesh, site=None):
+    leaf = policy.resolve(site)
     bentry = _batch_entry(mesh, x.shape[0]) if x.ndim > 2 else None
     sx, sw, so = _col_specs(mesh, x.ndim, bentry)
-    out = shard_map(lambda xs, ws: _matmul_nograd(xs, ws, policy),
+    out = shard_map(lambda xs, ws: _matmul_nograd(xs, ws, leaf),
                     mesh=mesh, in_specs=(sx, sw), out_specs=so,
                     check_rep=False)(x, w)
     return out, (x, w)
 
 
-def _col_bwd(policy, mesh, res, g):
+def _col_bwd(policy, mesh, site, res, g):
     x, w = res
-    bp = bwd_policy(policy)
+    leaf_dx = policy.resolve(site, pass_="dx")
+    leaf_dw = policy.resolve(site, pass_="dw")
     g = g.astype(jnp.float32)
     bentry = _batch_entry(mesh, x.shape[0]) if x.ndim > 2 else None
     sx, sw, so = _col_specs(mesh, x.ndim, bentry)
 
     def dx_body(gs, ws):
         # contraction over the model-sharded n: partial per shard -> psum
-        return jax.lax.psum(_matmul_nograd(gs, _swap(ws), bp), "model")
+        return jax.lax.psum(_matmul_nograd(gs, _swap(ws), leaf_dx), "model")
 
     dx = shard_map(dx_body, mesh=mesh, in_specs=(so, sw), out_specs=sx,
                    check_rep=False)(g, w)
-    dw = _dw_psum(x, g, bp, mesh, sx, so, sw, bentry)
+    dw = _dw_psum(x, g, leaf_dw, mesh, sx, so, sw, bentry)
     return dx.reshape(x.shape), dw.reshape(w.shape)
 
 
 column_parallel_matmul.defvjp(_col_fwd, _col_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def row_parallel_matmul(x, w, policy: NumericsPolicy, mesh: Mesh):
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def row_parallel_matmul(x, w, policy: Numerics, mesh: Mesh,
+                        site: str | None = None):
     """x (..., m, k) @ w (k, n) with k sharded over "model".
 
     Each shard's kernel contracts its k block; the single ``psum`` over
@@ -231,7 +246,7 @@ def row_parallel_matmul(x, w, policy: NumericsPolicy, mesh: Mesh):
     shard boundaries — bit-identical to the k-split oracle, within
     reassociation error of the unsplit kernel (docs/numerics.md).
     """
-    return _row_fwd(x, w, policy, mesh)[0]
+    return _row_fwd(x, w, policy, mesh, site)[0]
 
 
 def _row_specs(mesh, xdim, bentry):
@@ -240,57 +255,63 @@ def _row_specs(mesh, xdim, bentry):
     return sx, P("model", None), so
 
 
-def _row_fwd(x, w, policy, mesh):
+def _row_fwd(x, w, policy, mesh, site=None):
+    leaf = policy.resolve(site)
     bentry = _batch_entry(mesh, x.shape[0]) if x.ndim > 2 else None
     sx, sw, so = _row_specs(mesh, x.ndim, bentry)
 
     def body(xs, ws):
-        return jax.lax.psum(_matmul_nograd(xs, ws, policy), "model")
+        return jax.lax.psum(_matmul_nograd(xs, ws, leaf), "model")
 
     out = shard_map(body, mesh=mesh, in_specs=(sx, sw), out_specs=so,
                     check_rep=False)(x, w)
     return out, (x, w)
 
 
-def _row_bwd(policy, mesh, res, g):
+def _row_bwd(policy, mesh, site, res, g):
     x, w = res
-    bp = bwd_policy(policy)
+    leaf_dx = policy.resolve(site, pass_="dx")
+    leaf_dw = policy.resolve(site, pass_="dw")
     g = g.astype(jnp.float32)
     bentry = _batch_entry(mesh, x.shape[0]) if x.ndim > 2 else None
     sx, sw, so = _row_specs(mesh, x.ndim, bentry)
 
     def dx_body(gs, ws):
         # w's k rows live on this shard: dx block is shard-local, exact
-        return _matmul_nograd(gs, _swap(ws), bp)
+        return _matmul_nograd(gs, _swap(ws), leaf_dx)
 
     dx = shard_map(dx_body, mesh=mesh, in_specs=(so, sw), out_specs=sx,
                    check_rep=False)(g, w)
-    dw = _dw_psum(x, g, bp, mesh, sx, so, sw, bentry)
+    dw = _dw_psum(x, g, leaf_dw, mesh, sx, so, sw, bentry)
     return dx.reshape(x.shape), dw.reshape(w.shape)
 
 
 row_parallel_matmul.defvjp(_row_fwd, _row_bwd)
 
 
-def parallel_matmul(x, w, policy: NumericsPolicy, kind: str | None):
+def parallel_matmul(x, w, policy: Numerics, kind: str | None,
+                    site: str | None = None):
     """Model-layer dispatch point: the sharded fused kernel when active
     and supported, ``policy_matmul`` (single-device kernel or GSPMD)
     otherwise.  ``kind`` is the layer's Megatron role, mirroring
     ``sharding._RULES``: "column" (wq/wk/wv, wg/wu, head) or "row"
-    (wo, wd)."""
+    (wo, wd); ``site`` is the numerics site label resolved per pass.
+    The sharded path engages on the *forward* leaf — a table whose fwd
+    leaf is not amsim falls back to policy_matmul (its amsim backward
+    leaves then lower through GSPMD's replicated kernels)."""
     from repro.kernels.ops import policy_matmul  # runtime: avoid stale ref
 
     if kind is not None:
-        mesh = active_mesh(policy)
+        mesh = active_mesh(policy.resolve(site))
         if mesh is not None and matmul_supported(kind, x.shape, w.shape, mesh):
             fn = (column_parallel_matmul if kind == "column"
                   else row_parallel_matmul)
-            return fn(x, w, policy, mesh)
-    return policy_matmul(x, w, policy)
+            return fn(x, w, policy, mesh, site)
+    return policy_matmul(x, w, policy, site)
 
 
 # ============================================================== attention
-def attention_supported(policy: NumericsPolicy, mesh: Mesh, q_shape,
+def attention_supported(policy: Numerics, mesh: Mesh, q_shape,
                         k_shape, *, causal: bool, window: int) -> bool:
     """Whether the fused one-launch attention kernel can run per shard:
     KV heads divide "model", batch divides the data axes (or there are
@@ -312,7 +333,7 @@ def attention_supported(policy: NumericsPolicy, mesh: Mesh, q_shape,
                                    window=window)
 
 
-def sharded_attention(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
+def sharded_attention(q, k, v, q_pos, k_pos, policy: Numerics, *,
                       causal: bool, window: int, mesh: Mesh):
     """Fused attention with KV heads over "model", batch over the data
     axes.  Heads and batch are embarrassingly parallel in the kernel
@@ -332,7 +353,7 @@ def sharded_attention(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
 
 
 # ================================================================= conv2d
-def conv_supported(policy: NumericsPolicy, mesh: Mesh, x_shape) -> bool:
+def conv_supported(policy: Numerics, mesh: Mesh, x_shape) -> bool:
     """Batch-parallel conv: N must shard over the data axes (weights are
     replicated; "model" sharding of channels is out of scope for the
     vision stack)."""
@@ -341,7 +362,7 @@ def conv_supported(policy: NumericsPolicy, mesh: Mesh, x_shape) -> bool:
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def sharded_conv2d(x, w, stride: int, padding, policy: NumericsPolicy,
+def sharded_conv2d(x, w, stride: int, padding, policy: Numerics,
                    mesh: Mesh):
     """NHWC conv with N sharded over the data axes; each shard runs the
     fused implicit-GEMM kernels (fwd, dw, dx) on its batch block.  dw
@@ -384,12 +405,13 @@ def _sconv_bwd(stride, padding, policy, mesh, res, g):
 sharded_conv2d.defvjp(_sconv_fwd, _sconv_bwd)
 
 
-def parallel_conv2d(x, w, stride: int, padding, policy: NumericsPolicy):
+def parallel_conv2d(x, w, stride: int, padding, policy: Numerics):
     """Conv dispatch point: batch-sharded fused kernels when active,
-    ``ops.approx_conv2d`` otherwise."""
+    ``ops.approx_conv2d`` otherwise.  Engages on the "conv" site's
+    forward leaf; per-pass resolution happens inside the conv VJP."""
     from repro.kernels.ops import approx_conv2d
 
-    mesh = active_mesh(policy)
+    mesh = active_mesh(policy.resolve("conv"))
     if mesh is not None and conv_supported(policy, mesh, x.shape):
         return sharded_conv2d(x, w, stride, padding, policy, mesh)
     return approx_conv2d(x, w, stride, padding, policy)

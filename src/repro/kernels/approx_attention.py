@@ -305,6 +305,7 @@ def approx_attention_fused(
     chunk: int | None = None,
     contiguous_q: bool = True,
     interpret: bool | None = None,
+    mult: str | None = None,
 ):
     """One-launch LUT-simulated attention.
 
@@ -338,7 +339,8 @@ def approx_attention_fused(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if None in (bq, bkv, chunk):
-        cfg = autotune.get_attn_config(B * KV, S, T, H // KV, dh, M)
+        cfg = autotune.get_attn_config(B * KV, S, T, H // KV, dh, M,
+                                       mult=mult)
         # Cache-derived tiles are capped so the attention_fused_supported
         # VMEM bound holds for any tuned entry (explicit arguments are
         # taken as-is, clamped only to the problem dims).

@@ -186,6 +186,7 @@ def approx_conv2d_fused(
     bo: int | None = None,
     chunk: int | None = None,
     interpret: bool | None = None,
+    mult: str | None = None,
 ):
     """Implicit-GEMM LUT-simulated conv2d: x (N,H,W,C), w (KH,KW,C,O) ->
     (N,OH,OW,O), NHWC, FP32 accumulate.
@@ -206,7 +207,7 @@ def approx_conv2d_fused(
         interpret = jax.default_backend() != "tpu"
     if None in (br, bo, chunk):
         cfg = autotune.get_conv_config(n, h, wid, c, kh, kw, o, stride,
-                                       padding, M)
+                                       padding, M, mult=mult)
         # Cache-derived row tiles are capped at MAX_BR so the
         # fused_supported VMEM bound holds for any tuned entry
         # (explicit br arguments are taken as-is).
@@ -301,6 +302,7 @@ def approx_conv2d_dw(
     padding="SAME",
     chunk: int | None = None,
     interpret: bool | None = None,
+    mult: str | None = None,
 ):
     """Fused weight gradient (paper Fig. 8b): dw[ki,kj,c,o] =
     sum_{n,oh,ow} amsim(x_patch, g) — the patch outer product, with the
@@ -319,7 +321,7 @@ def approx_conv2d_dw(
     if chunk is None:
         o = g.shape[-1]
         cfg = autotune.get_conv_config(n, h, wid, c, kh, kw, o, stride,
-                                       padding, M)
+                                       padding, M, mult=mult)
         chunk = cfg.dw_chunk
     chunk = best_chunk(chunk, g.shape[1] * g.shape[2])
     return _dw_impl(x, g, lut, M, stride=stride, pads=pads, kh=kh, kw=kw,

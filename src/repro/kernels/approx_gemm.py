@@ -85,7 +85,8 @@ def _amsim_kernel_batched(a_ref, b_ref, lut_ref, o_ref, acc_ref, *,
         o_ref[0] = acc_ref[...]
 
 
-def _resolve(kind, m, k, n, M, batch, bm, bn, bk, chunk, interpret):
+def _resolve(kind, m, k, n, M, batch, bm, bn, bk, chunk, interpret,
+             mult=None):
     """Fill unset tiling params from the autotune cache.
 
     Autotuned/default block sizes are clamped to the 128-rounded problem
@@ -99,7 +100,8 @@ def _resolve(kind, m, k, n, M, batch, bm, bn, bk, chunk, interpret):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if None in (bm, bn, bk, chunk):
-        cfg = autotune.get_block_config(kind, m, k, n, M, batch=batch)
+        cfg = autotune.get_block_config(kind, m, k, n, M, batch=batch,
+                                        mult=mult)
         bm = min(cfg.bm, _ceil128(m)) if bm is None else bm
         bn = min(cfg.bn, _ceil128(n)) if bn is None else bn
         bk = min(cfg.bk, _ceil128(k)) if bk is None else bk
@@ -149,8 +151,12 @@ def approx_gemm(
     bk: int | None = None,
     chunk: int | None = None,
     interpret: bool | None = None,
+    mult: str | None = None,
 ):
     """LUT-simulated GEMM: (m, k) @ (k, n) -> (m, n), FP32 accumulate.
+
+    ``mult`` is the resolved multiplier name, used only to key the
+    autotune cache (per-multiplier tilings under mixed policy tables).
 
     ``lut`` may be the canonical uint32 table or the packed uint16 one
     (detected by dtype).  Zero padding is safe: AMSim flushes
@@ -163,7 +169,7 @@ def approx_gemm(
     lut = jnp.asarray(lut)
     lut = lut if lut.dtype == jnp.uint16 else lut.astype(jnp.uint32)
     bm, bn, bk, chunk, interpret = _resolve(
-        "gemm2d", m, k, n, M, 0, bm, bn, bk, chunk, interpret)
+        "gemm2d", m, k, n, M, 0, bm, bn, bk, chunk, interpret, mult)
     return _approx_gemm_impl(a, b, lut, M, bm=bm, bn=bn, bk=bk,
                              chunk=chunk, interpret=interpret)
 
@@ -214,6 +220,7 @@ def approx_gemm_batched(
     bk: int | None = None,
     chunk: int | None = None,
     interpret: bool | None = None,
+    mult: str | None = None,
 ):
     """Batched LUT-simulated GEMM: (B, m, k) @ (B, k, n) -> (B, m, n).
 
@@ -229,6 +236,6 @@ def approx_gemm_batched(
     lut = jnp.asarray(lut)
     lut = lut if lut.dtype == jnp.uint16 else lut.astype(jnp.uint32)
     bm, bn, bk, chunk, interpret = _resolve(
-        "gemm3d", m, k, n, M, B, bm, bn, bk, chunk, interpret)
+        "gemm3d", m, k, n, M, B, bm, bn, bk, chunk, interpret, mult)
     return _approx_gemm_batched_impl(a, b, lut, M, bm=bm, bn=bn, bk=bk,
                                      chunk=chunk, interpret=interpret)

@@ -5,9 +5,14 @@ interpret mode on CPU) the right (bm, bn, bk, chunk) depends on the shape,
 the LUT size (M) and the backend.  This module sweeps a candidate list with
 the real kernel and caches the winner in a JSON file on disk, keyed by
 
-    <backend>|<kind>|<shape bucket>|M<M>
+    <backend>|<kind>|<shape bucket>|M<M>[-<multiplier>]
 
 where *kind* is ``gemm2d`` / ``gemm3d`` / ``conv2d`` / ``attention``.
+The optional ``-<multiplier>`` suffix is the *resolved* multiplier name
+(e.g. ``mitchell8``): heterogeneous policy tables can assign different
+multipliers with the same M to different sites, and a per-multiplier
+entry keeps their tuned tilings from colliding.  Lookups fall back to
+the bare ``M<M>`` key, so multiplier-agnostic sweeps stay valid.
 The GEMM bucket rounds every dimension up to a power of two (so one
 sweep covers a family of nearby shapes); the conv bucket keeps
 H/W/KHxKW/stride/padding exact (they fix the in-kernel slicing
@@ -233,10 +238,18 @@ def shape_bucket(m: int, k: int, n: int, batch: int = 0) -> str:
     return "_".join(parts)
 
 
+def _m_tag(M: int, mult: str | None) -> str:
+    """``M7`` or, with a resolved multiplier name, ``M7-mitchell8`` —
+    per-multiplier entries keep mixed-multiplier tables from colliding
+    on a shared mantissa width."""
+    return f"M{M}" if mult is None else f"M{M}-{mult}"
+
+
 def cache_key(kind: str, m: int, k: int, n: int, M: int,
-              batch: int = 0, backend: str | None = None) -> str:
+              batch: int = 0, backend: str | None = None,
+              mult: str | None = None) -> str:
     backend = backend or jax.default_backend()
-    return f"{backend}|{kind}|{shape_bucket(m, k, n, batch)}|M{M}"
+    return f"{backend}|{kind}|{shape_bucket(m, k, n, batch)}|{_m_tag(M, mult)}"
 
 
 def _pad_tag(padding) -> str:
@@ -255,10 +268,11 @@ def conv_shape_bucket(n: int, h: int, w: int, c: int, kh: int, kw: int,
 
 def conv_cache_key(n: int, h: int, w: int, c: int, kh: int, kw: int,
                    o: int, stride: int, padding, M: int,
-                   backend: str | None = None) -> str:
+                   backend: str | None = None,
+                   mult: str | None = None) -> str:
     backend = backend or jax.default_backend()
     bucket = conv_shape_bucket(n, h, w, c, kh, kw, o, stride, padding)
-    return f"{backend}|conv2d|{bucket}|M{M}"
+    return f"{backend}|conv2d|{bucket}|{_m_tag(M, mult)}"
 
 
 def attn_shape_bucket(bh: int, s: int, t: int, g: int, dh: int) -> str:
@@ -270,16 +284,27 @@ def attn_shape_bucket(bh: int, s: int, t: int, g: int, dh: int) -> str:
 
 
 def attn_cache_key(bh: int, s: int, t: int, g: int, dh: int, M: int,
-                   backend: str | None = None) -> str:
+                   backend: str | None = None,
+                   mult: str | None = None) -> str:
     backend = backend or jax.default_backend()
-    return f"{backend}|attention|{attn_shape_bucket(bh, s, t, g, dh)}|M{M}"
+    return (f"{backend}|attention|{attn_shape_bucket(bh, s, t, g, dh)}"
+            f"|{_m_tag(M, mult)}")
 
 
 # ------------------------------------------------------------------ lookup
+def _lookup(key_fn, mult):
+    """Per-multiplier entry first, bare-M entry as fallback (so sweeps
+    tuned without a multiplier name still serve every table)."""
+    hit = _entries().get(key_fn(mult)) if mult is not None else None
+    return hit if hit is not None else _entries().get(key_fn(None))
+
+
 def get_block_config(kind: str, m: int, k: int, n: int, M: int,
-                     batch: int = 0, backend: str | None = None) -> BlockConfig:
+                     batch: int = 0, backend: str | None = None,
+                     mult: str | None = None) -> BlockConfig:
     """Tuned winner for this bucket, or the kind's default on a miss."""
-    hit = _entries().get(cache_key(kind, m, k, n, M, batch, backend))
+    hit = _lookup(lambda mu: cache_key(kind, m, k, n, M, batch, backend, mu),
+                  mult)
     if isinstance(hit, BlockConfig):
         return hit
     return DEFAULT_BATCHED if kind == "gemm3d" else DEFAULT_2D
@@ -287,17 +312,20 @@ def get_block_config(kind: str, m: int, k: int, n: int, M: int,
 
 def get_conv_config(n: int, h: int, w: int, c: int, kh: int, kw: int,
                     o: int, stride: int, padding, M: int,
-                    backend: str | None = None) -> ConvBlockConfig:
+                    backend: str | None = None,
+                    mult: str | None = None) -> ConvBlockConfig:
     """Tuned fused-conv tiling for this bucket, or DEFAULT_CONV."""
-    hit = _entries().get(
-        conv_cache_key(n, h, w, c, kh, kw, o, stride, padding, M, backend))
+    hit = _lookup(lambda mu: conv_cache_key(n, h, w, c, kh, kw, o, stride,
+                                            padding, M, backend, mu), mult)
     return hit if isinstance(hit, ConvBlockConfig) else DEFAULT_CONV
 
 
 def get_attn_config(bh: int, s: int, t: int, g: int, dh: int, M: int,
-                    backend: str | None = None) -> AttnBlockConfig:
+                    backend: str | None = None,
+                    mult: str | None = None) -> AttnBlockConfig:
     """Tuned fused-attention tiling for this bucket, or DEFAULT_ATTN."""
-    hit = _entries().get(attn_cache_key(bh, s, t, g, dh, M, backend))
+    hit = _lookup(lambda mu: attn_cache_key(bh, s, t, g, dh, M, backend, mu),
+                  mult)
     return hit if isinstance(hit, AttnBlockConfig) else DEFAULT_ATTN
 
 
@@ -315,7 +343,7 @@ def _time_call(fn, *args, iters: int = 2) -> float:
 
 def autotune(kind: str, a, b, lut, M: int, *, candidates=None,
              interpret: bool | None = None, iters: int = 2,
-             save: bool = True) -> BlockConfig:
+             save: bool = True, mult: str | None = None) -> BlockConfig:
     """Sweep candidate tilings with the real kernel; cache + return the winner.
 
     ``a``/``b`` are representative operands: (m, k)/(k, n) for ``gemm2d``,
@@ -353,13 +381,15 @@ def autotune(kind: str, a, b, lut, M: int, *, candidates=None,
     if best is None:
         return DEFAULT_BATCHED if batched else DEFAULT_2D
     if save:
-        _save_entry(cache_key(kind, m, k, n, M, B), best, best_t * 1e6)
+        _save_entry(cache_key(kind, m, k, n, M, B, mult=mult), best,
+                    best_t * 1e6)
     return best
 
 
 def autotune_conv(x, w, lut, M: int, *, stride: int = 1, padding="SAME",
                   candidates=None, interpret: bool | None = None,
-                  iters: int = 2, save: bool = True) -> ConvBlockConfig:
+                  iters: int = 2, save: bool = True,
+                  mult: str | None = None) -> ConvBlockConfig:
     """Sweep fused-conv tilings (forward + weight-gradient timed
     together, since one cache entry serves both); cache + return the
     winner.  Candidates that fail to lower are skipped; if every
@@ -393,14 +423,16 @@ def autotune_conv(x, w, lut, M: int, *, stride: int = 1, padding="SAME",
         return DEFAULT_CONV
     if save:
         _save_entry(conv_cache_key(n, h, wid, c, kh, kw, o, stride,
-                                   padding, M), best, best_t * 1e6)
+                                   padding, M, mult=mult), best,
+                    best_t * 1e6)
     return best
 
 
 def autotune_attention(q, k, v, q_pos, k_pos, lut, M: int, *,
                        causal: bool = True, window: int = 0,
                        candidates=None, interpret: bool | None = None,
-                       iters: int = 2, save: bool = True) -> AttnBlockConfig:
+                       iters: int = 2, save: bool = True,
+                       mult: str | None = None) -> AttnBlockConfig:
     """Sweep fused-attention tilings with the real kernel; cache + return
     the winner.  ``q`` is (B, S, H, dh), ``k``/``v`` (B, T, KV, dh) —
     representative operands for the bucket.  Candidates that fail to
@@ -431,6 +463,6 @@ def autotune_attention(q, k, v, q_pos, k_pos, lut, M: int, *,
     if best is None:
         return DEFAULT_ATTN
     if save:
-        _save_entry(attn_cache_key(B * KV, S, T, G, dh, M), best,
+        _save_entry(attn_cache_key(B * KV, S, T, G, dh, M, mult=mult), best,
                     best_t * 1e6)
     return best

@@ -5,7 +5,7 @@ ops (§VI): differentiable matmul / einsum / conv2d primitives whose forward
 *and backward* multiplications are routed through the approximate-multiplier
 simulation selected by a ``NumericsPolicy``.
 
-Execution modes (policy.mode):
+Execution modes (leaf policy .mode):
   native     jnp dot -> MXU, exact f32               ("TFnG" baseline)
   surrogate  mantissa-truncate operands, native dot  (beyond-paper fast path,
              numerics-equivalent for the truncation family)
@@ -13,11 +13,23 @@ Execution modes (policy.mode):
   amsim_jnp  pure-jnp LUT simulation                 (portable oracle)
   direct     pure-jnp bit-manipulation of the model  ("direct C sim", Fig. 6)
 
+Heterogeneous numerics: every public op takes a *policy* — a flat
+``NumericsPolicy`` or a hierarchical ``PolicyTable`` — plus an optional
+``site`` label (the layer role threaded down from models/: "qkv", "wd",
+"conv", "attn_score", ...).  This module is the single **resolve seam**:
+``policy.resolve(site, pass_=...)`` picks the leaf ``(mode, multiplier)``
+for each of the three passes (``fwd``, ``dx`` — activation gradients,
+``dw`` — weight gradients), so a table can e.g. run exact weight
+gradients with approximate activation gradients.  The legacy flat-policy
+``approx_backward`` / ``approx_attention`` switches are implemented as
+compiled-in default rules inside ``NumericsPolicy.resolve`` — there are
+no special cases left here.  Resolution happens at trace time (policies
+are static custom_vjp args), so a fixed table never retraces.
+
 Differentiation: ``policy_matmul`` / ``policy_einsum`` / ``approx_conv2d``
-carry a ``jax.custom_vjp`` so the backward pass performs the *same kind* of
-approximate multiplications (paper: approximate multipliers in both forward
-and backpropagation), unless ``policy.approx_backward`` is False, in which
-case gradients use native exact matmuls.
+carry a ``jax.custom_vjp`` so the backward pass performs the
+approximate multiplications its ``dx``/``dw`` resolutions select (paper:
+approximate multipliers in both forward and backpropagation).
 
 Accumulation is always f32 (paper §VII).
 
@@ -31,7 +43,6 @@ REPRO_SHARD_FUSED up there are all documented in docs/configuration.md.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 from functools import partial
 
@@ -42,7 +53,7 @@ import numpy as np
 from repro.core.float_bits import jnp_truncate_mantissa, jnp_round_mantissa
 from repro.core.lutgen import get_lut, get_packed_lut
 from repro.core.multipliers import get_multiplier
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import PASSES, Numerics, NumericsPolicy
 from repro.kernels.approx_attention import (NEG_INF, approx_attention_fused,
                                             attention_fused_supported)
 from repro.kernels.common import attention_mask, best_chunk
@@ -64,21 +75,34 @@ def _amsim_lut(mult):
     return packed if packed is not None else get_lut(mult)
 
 
-def _gemm2d(a, b, policy: NumericsPolicy):
-    """(m, k) @ (k, n) -> (m, n) under the policy's numerics. f32 accumulate."""
+# One mode-routing table shared by the 2-D and batched engines (the two
+# differ only in which Pallas kernel ``amsim`` lowers to — the jnp
+# oracle modes are batch-generalised already).  Each entry maps a mode
+# to ``impl(a, b, mult, kernel)``; ``kernel`` is the engine's amsim
+# kernel, with the resolved multiplier name keying the autotune cache.
+_GEMM_MODES = {
+    "amsim": lambda a, b, mult, kernel: kernel(
+        a, b, _amsim_lut(mult), mult.mantissa_bits, mult=mult.name),
+    "amsim_jnp": lambda a, b, mult, kernel: ref_amsim_gemm(
+        a, b, jnp.asarray(get_lut(mult)), mult.mantissa_bits),
+    "direct": lambda a, b, mult, kernel: ref_direct_gemm(a, b, mult),
+}
+
+
+def _gemm_dispatch(a, b, policy: NumericsPolicy, kernel):
+    """Route one GEMM through the mode table under a *leaf* policy."""
     mode = policy.mode
     if mode == "native" or policy.is_native:
         return jnp.matmul(a, b, preferred_element_type=jnp.float32)
-    mult = get_multiplier(policy.multiplier)
-    M = mult.mantissa_bits
-    if mode == "amsim":
-        return approx_gemm(a, b, _amsim_lut(mult), M)
-    if mode == "amsim_jnp":
-        lut = get_lut(mult)
-        return ref_amsim_gemm(a, b, jnp.asarray(lut), M)
-    if mode == "direct":
-        return ref_direct_gemm(a, b, mult)
-    raise ValueError(f"unknown mode {mode!r}")
+    impl = _GEMM_MODES.get(mode)
+    if impl is None:
+        raise ValueError(f"unknown mode {mode!r}")
+    return impl(a, b, get_multiplier(policy.multiplier), kernel)
+
+
+def _gemm2d(a, b, policy: NumericsPolicy):
+    """(m, k) @ (k, n) -> (m, n) under the policy's numerics. f32 accumulate."""
+    return _gemm_dispatch(a, b, policy, approx_gemm)
 
 
 def _gemm_batched(a, b, policy: NumericsPolicy):
@@ -90,16 +114,7 @@ def _gemm_batched(a, b, policy: NumericsPolicy):
     kernel launch covers the whole batch in every attention score/value
     contraction, MoE expert stack, and decode step.
     """
-    mode = policy.mode
-    mult = get_multiplier(policy.multiplier)
-    M = mult.mantissa_bits
-    if mode == "amsim":
-        return approx_gemm_batched(a, b, _amsim_lut(mult), M)
-    if mode == "amsim_jnp":
-        return ref_amsim_gemm(a, b, jnp.asarray(get_lut(mult)), M)
-    if mode == "direct":
-        return ref_direct_gemm(a, b, mult)
-    raise ValueError(f"unknown mode {mode!r}")
+    return _gemm_dispatch(a, b, policy, approx_gemm_batched)
 
 
 def _matmul_nograd(a, b, policy: NumericsPolicy):
@@ -156,32 +171,38 @@ def _matmul_nograd(a, b, policy: NumericsPolicy):
 # Differentiable matmul (paper: approx multiplies in fwd AND bwd)
 # =====================================================================
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
-def policy_matmul(a, b, policy: NumericsPolicy):
-    """Differentiable batched matmul under ``policy`` numerics."""
-    return _matmul_nograd(a, b, policy)
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def policy_matmul(a, b, policy: Numerics, site: str | None = None):
+    """Differentiable batched matmul under the numerics ``policy``
+    resolves at ``site`` (flat policy or per-site table): forward under
+    the ``fwd`` leaf, backward GEMMs under the ``dx``/``dw`` leaves."""
+    return _matmul_nograd(a, b, policy.resolve(site))
 
 
-def bwd_policy(policy: NumericsPolicy) -> NumericsPolicy:
-    """The policy backward GEMMs run under: the same approximate
-    numerics when ``policy.approx_backward`` (paper: both phases), exact
-    native matmuls otherwise.  Single definition shared by every custom
-    VJP here and by the sharded wrappers (distributed/shard_fused)."""
-    return policy if policy.approx_backward else dataclasses.replace(
-        policy, mode="native")
+def _mm_fwd(a, b, policy, site=None):
+    return _matmul_nograd(a, b, policy.resolve(site)), (a, b)
 
 
-def _mm_fwd(a, b, policy):
-    return _matmul_nograd(a, b, policy), (a, b)
+# Sites whose second operand is a *parameter* even when it is a stacked
+# 3-D bank: the MoE expert FFN runs (E, C, d) @ (E, d, d_ff), so its
+# weight matmuls take the equal-batch layout that is otherwise an
+# activation-activation contraction (attention scores, SSD einsums).
+# Their db is a weight gradient and must resolve under the dw pass —
+# without this set, a table's dw rule would silently skip MoE experts.
+_STACKED_WEIGHT_SITES = frozenset({"wg", "wu", "wd"})
 
 
-def _mm_bwd(policy, res, g):
+def _mm_bwd(policy, site, res, g):
     a, b = res
-    bp = bwd_policy(policy)
+    # dx = activation gradients, dw = weight gradients (paper Fig. 8):
+    # a table can resolve them to different numerics; the flat policy's
+    # approx_backward flag resolves both the same way it always did.
+    leaf_dx = policy.resolve(site, pass_="dx")
+    leaf_dw = policy.resolve(site, pass_="dw")
     g = g.astype(jnp.float32)
     swap = lambda x: jnp.swapaxes(x, -1, -2)
     # dA = g @ B^T  — same batch layout as forward.
-    da = _matmul_nograd(g, swap(b), bp)
+    da = _matmul_nograd(g, swap(b), leaf_dx)
     extra = da.ndim - a.ndim
     if extra > 0:
         da = da.sum(axis=tuple(range(extra)))
@@ -190,9 +211,12 @@ def _mm_bwd(policy, res, g):
         # dB = A_flat^T @ g_flat, one large GEMM (paper Fig. 8(b)).
         k = a.shape[-1]
         n = g.shape[-1]
-        db = _matmul_nograd(a.reshape(-1, k).T, g.reshape(-1, n), bp)
+        db = _matmul_nograd(a.reshape(-1, k).T, g.reshape(-1, n), leaf_dw)
     else:
-        db = _matmul_nograd(swap(a), g, bp)
+        # b is batched: an activation (attention-style contraction, dx)
+        # unless the site stacks its weights 3-D (MoE expert banks, dw).
+        leaf_db = leaf_dw if site in _STACKED_WEIGHT_SITES else leaf_dx
+        db = _matmul_nograd(swap(a), g, leaf_db)
         # Sum over broadcasted batch dims of b.
         extra = db.ndim - b.ndim
         if extra > 0:
@@ -236,9 +260,15 @@ def _parse_einsum(spec: str, a_shape, b_shape):
     return sa, sb, out, batch, contract, afree, bfree, dims
 
 
-def policy_einsum(spec: str, a, b, policy: NumericsPolicy):
+def _all_passes_native(policy: Numerics, site: str | None) -> bool:
+    """True when every pass at this site resolves native — the einsum
+    can then stay a single jnp.einsum and use XLA's own autodiff."""
+    return all(policy.resolve(site, pass_=p).is_native for p in PASSES)
+
+
+def policy_einsum(spec: str, a, b, policy: Numerics, site: str | None = None):
     """2-operand einsum routed through policy numerics (differentiable)."""
-    if policy.is_native:
+    if _all_passes_native(policy, site):
         return jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32),
                           preferred_element_type=jnp.float32)
     sa, sb, out, batch, contract, afree, bfree, dims = _parse_einsum(
@@ -256,7 +286,7 @@ def policy_einsum(spec: str, a, b, policy: NumericsPolicy):
     n = int(np.prod([dims[c] for c in bfree], initial=1))
     at = at.reshape(bshape + [m, k])
     bt = bt.reshape(bshape + [k, n])
-    o = policy_matmul(at, bt, policy)
+    o = policy_matmul(at, bt, policy, site)
     o = o.reshape(bshape + [dims[c] for c in afree] + [dims[c] for c in bfree])
     # current order: batch + afree + bfree -> out order
     cur = batch + afree + bfree
@@ -281,8 +311,9 @@ def policy_einsum(spec: str, a, b, policy: NumericsPolicy):
 _conv_pads = conv_pads
 
 
-def _conv_use_fused(x_shape, w_shape, stride, policy) -> bool:
-    if policy.mode != "amsim" or policy.is_native:
+def _conv_use_fused(x_shape, w_shape, stride, leaf: NumericsPolicy) -> bool:
+    """``leaf`` is an already-resolved (per-pass) policy."""
+    if leaf.mode != "amsim" or leaf.is_native:
         return False
     if os.environ.get("REPRO_CONV_FUSED", "1").lower() in ("0", "false"):
         return False
@@ -297,28 +328,31 @@ def conv2d_im2col(x, w, stride, padding, policy):
     kh, kw, _, o = w.shape
     pad = _conv_pads(h, wid, kh, kw, stride, padding)
     cols = ref_im2col(x, kh, kw, stride, pad)      # (N*OH*OW, KH*KW*C)
-    out = policy_matmul(cols, w.reshape(-1, o), policy)
+    out = policy_matmul(cols, w.reshape(-1, o), policy, "conv")
     oh = (h + pad[0] + pad[1] - kh) // stride + 1
     ow = (wid + pad[2] + pad[3] - kw) // stride + 1
     return out.reshape(n, oh, ow, o)
 
 
 def _conv_fwd_impl(x, w, stride, padding, policy):
-    if _conv_use_fused(x.shape, w.shape, stride, policy):
-        mult = get_multiplier(policy.multiplier)
+    leaf = policy.resolve("conv")
+    if _conv_use_fused(x.shape, w.shape, stride, leaf):
+        mult = get_multiplier(leaf.multiplier)
         return approx_conv2d_fused(
             x, w, _amsim_lut(mult), mult.mantissa_bits,
-            stride=stride, padding=padding)
+            stride=stride, padding=padding, mult=mult.name)
     return conv2d_im2col(x, w, stride, padding, policy)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def approx_conv2d(x, w, stride: int, padding: str, policy: NumericsPolicy):
+def approx_conv2d(x, w, stride: int, padding: str, policy: Numerics):
     """Differentiable NHWC conv2d with approximate multiplications.
 
     Forward and both backward GEMMs (weight gradient & preceding-layer
-    gradient, paper Fig. 8 b/c) run under ``policy`` numerics; the paper's
-    dilation/padding restructuring maps to index arithmetic here.
+    gradient, paper Fig. 8 b/c) run under the numerics ``policy``
+    resolves at site "conv" — per pass, so a table can e.g. keep dw
+    exact while fwd/dx stay approximate; the paper's dilation/padding
+    restructuring maps to index arithmetic here.
     """
     return _conv_fwd_impl(x, w, stride, padding, policy)
 
@@ -329,27 +363,26 @@ def _conv_fwd(x, w, stride, padding, policy):
 
 def _conv_bwd(stride, padding, policy, res, g):
     x, w = res
-    bp = bwd_policy(policy)
+    leaf_dx = policy.resolve("conv", pass_="dx")
+    leaf_dw = policy.resolve("conv", pass_="dw")
     n, h, wid, c = x.shape
     kh, kw, _, o = w.shape
     pad = _conv_pads(h, wid, kh, kw, stride, padding)
     _, oh, ow, _ = g.shape
-    fused = _conv_use_fused(x.shape, w.shape, stride, bp)
-    if fused:
-        mult = get_multiplier(bp.multiplier)
-        lut, M = _amsim_lut(mult), mult.mantissa_bits
 
     # --- weight gradient (Fig. 8b): cols(x)^T @ g — the fused kernel
     # computes the patch outer product in place of the materialised
     # im2col^T GEMM; the paper's fused dilation corresponds to the
     # strided patch slicing inside either lowering.
-    if fused:
-        dw = approx_conv2d_dw(x, g, lut, M, kh=kh, kw=kw, stride=stride,
-                              padding=padding)
+    if _conv_use_fused(x.shape, w.shape, stride, leaf_dw):
+        mw = get_multiplier(leaf_dw.multiplier)
+        dw = approx_conv2d_dw(x, g, _amsim_lut(mw), mw.mantissa_bits,
+                              kh=kh, kw=kw, stride=stride, padding=padding,
+                              mult=mw.name)
     else:
         g2 = g.reshape(n * oh * ow, o).astype(jnp.float32)
         cols = ref_im2col(x, kh, kw, stride, pad)    # (N*OH*OW, KH*KW*C)
-        dw = policy_matmul(cols.T, g2, bp).reshape(kh, kw, c, o)
+        dw = _matmul_nograd(cols.T, g2, leaf_dw).reshape(kh, kw, c, o)
 
     # --- preceding-layer gradient (Fig. 8c): full correlation of the
     # dilated+padded error with the reversed-transposed weights.
@@ -367,14 +400,17 @@ def _conv_bwd(stride, padding, policy, res, g):
     pr = wid - (gw + pl_ - kw + 1)
     wrev = w[::-1, ::-1, :, :]                             # reverse
     wrt4 = jnp.transpose(wrev, (0, 1, 3, 2))               # O <-> C
-    if fused and fused_supported(gd.shape, wrt4.shape, 1):
+    if _conv_use_fused(x.shape, w.shape, stride, leaf_dx) \
+            and fused_supported(gd.shape, wrt4.shape, 1):
         # Transposed conv IS a conv: the same fused forward kernel runs
         # the stride-1 correlation under the explicit asymmetric pads.
-        dx = approx_conv2d_fused(gd, wrt4, lut, M, stride=1,
-                                 padding=(pt, pb, pl_, pr))
+        mx = get_multiplier(leaf_dx.multiplier)
+        dx = approx_conv2d_fused(gd, wrt4, _amsim_lut(mx), mx.mantissa_bits,
+                                 stride=1, padding=(pt, pb, pl_, pr),
+                                 mult=mx.name)
     else:
         gcols = ref_im2col(gd, kh, kw, 1, (pt, pb, pl_, pr))  # (N*H*W, KH*KW*O)
-        dx = policy_matmul(gcols, wrt4.reshape(-1, c), bp).reshape(
+        dx = _matmul_nograd(gcols, wrt4.reshape(-1, c), leaf_dx).reshape(
             n, h, wid, c)
     return dx, dw
 
@@ -398,34 +434,52 @@ approx_conv2d.defvjp(_conv_fwd, _conv_bwd)
 #     the pre-fused lowering whatever the forward took.
 # =====================================================================
 
-def attend_einsum(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
+def attend_einsum(q, k, v, q_pos, k_pos, policy: Numerics, *,
                   causal: bool, window: int):
     """Grouped-query einsum attention under ``policy`` numerics.
 
     q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H,dh).  k_pos holds the
     *absolute* position of every KV slot; negative means unwritten
     (ring-buffer cache) and is masked out.  The KV-head axis stays a
-    batch axis so KV is never materialised at full head count.
+    batch axis so KV is never materialised at full head count.  The two
+    contractions resolve under their own sites ("attn_score" /
+    "attn_value"), so a table can give the score and value GEMMs
+    different numerics — the einsum path is the only lowering that can
+    honour a split; the fused kernel requires them equal.
     """
     B, S, H, dh = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
     qg = q.reshape(B, S, KV, G, dh)
-    scores = policy_einsum("bqkgd,btkd->bkgqt", qg, k, policy) \
-        / jnp.sqrt(float(dh))
+    scores = policy_einsum("bqkgd,btkd->bkgqt", qg, k, policy,
+                           "attn_score") / jnp.sqrt(float(dh))
     mask = attention_mask(q_pos, k_pos, causal=causal, window=window)
     scores = jnp.where(mask[None, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
-    out = policy_einsum("bkgqt,btkd->bqkgd", probs, v, policy)
+    out = policy_einsum("bkgqt,btkd->bqkgd", probs, v, policy, "attn_value")
     return out.reshape(B, S, H, dh)
 
 
-def fused_attention_enabled(policy: NumericsPolicy, q_shape, k_shape, *,
+def attention_fused_leaf(policy: Numerics) -> NumericsPolicy | None:
+    """The single leaf the one-launch kernel would run BOTH attention
+    contractions under, or None when the policy resolves the score and
+    value sites to different numerics (the kernel bakes one LUT, so a
+    split forces the einsum lowering)."""
+    ls = policy.resolve("attn_score")
+    lv = policy.resolve("attn_value")
+    if (ls.mode, ls.multiplier) != (lv.mode, lv.multiplier):
+        return None
+    return ls
+
+
+def fused_attention_enabled(policy: Numerics, q_shape, k_shape, *,
                             causal: bool = True, window: int = 0) -> bool:
-    """Dispatch guard for the one-launch kernel: amsim mode only, killable
-    via REPRO_ATTN_FUSED=0, and the shape must pass the VMEM bounds
+    """Dispatch guard for the one-launch kernel: both attention sites
+    must resolve to the same amsim leaf, killable via
+    REPRO_ATTN_FUSED=0, and the shape must pass the VMEM bounds
     (window-compacted under a causal sliding window)."""
-    if policy.mode != "amsim" or policy.is_native:
+    leaf = attention_fused_leaf(policy)
+    if leaf is None or leaf.mode != "amsim" or leaf.is_native:
         return False
     if os.environ.get("REPRO_ATTN_FUSED", "1").lower() in ("0", "false"):
         return False
@@ -434,23 +488,23 @@ def fused_attention_enabled(policy: NumericsPolicy, q_shape, k_shape, *,
 
 
 def _attention_fwd_impl(q, k, v, q_pos, k_pos, policy, causal, window):
-    mult = get_multiplier(policy.multiplier)
+    mult = get_multiplier(attention_fused_leaf(policy).multiplier)
     return approx_attention_fused(
         q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
         q_pos, k_pos, _amsim_lut(mult), mult.mantissa_bits,
-        causal=causal, window=window)
+        causal=causal, window=window, mult=mult.name)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
-def policy_attention(q, k, v, q_pos, k_pos, policy: NumericsPolicy,
+def policy_attention(q, k, v, q_pos, k_pos, policy: Numerics,
                      causal: bool, window: int):
     """Differentiable one-launch fused attention under ``policy``.
 
     Forward runs the fused Pallas kernel; the backward pass recomputes
     through ``attend_einsum`` (jax.vjp), so gradients take exactly the
-    pre-fused einsum path — approximate backward GEMMs when
-    ``policy.approx_backward`` (handled inside policy_matmul's VJP),
-    native otherwise — bit-identical to the unfused lowering for
+    pre-fused einsum path — each backward GEMM under the numerics the
+    policy resolves for its site's ``dx`` pass (handled inside
+    policy_matmul's VJP) — bit-identical to the unfused lowering for
     S <= _BWD_Q_CHUNK, q-chunked above that to keep the recompute's
     score tensor memory-bounded (as the einsum path's forward scan
     did).  Callers must have checked :func:`fused_attention_enabled`.

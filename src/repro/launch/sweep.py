@@ -1,0 +1,196 @@
+"""Multiplier-assignment sweep runner: the paper's convergence/accuracy
+evaluation workflow (Fig. 10 / Tables III-IV) as a one-command tool,
+generalised to heterogeneous per-site numerics.
+
+Takes a grid of per-site multiplier assignments (``--point`` shorthand
+specs, a ``--grid-json`` file, or a ``--cross-sites x
+--cross-multipliers`` cross product), trains each point for N steps with
+the production trainer (same substrate as launch/train.py: step-indexed
+data pipeline, AdamW + cosine schedule), and emits a JSON report
+comparing per-step losses against the fp32 baseline — which layers/
+passes can take which approximate multiplier before convergence
+degrades, the question AdaPT and Li et al. pose per layer, answered per
+*site*.
+
+Every point asserts the no-retrace contract: a resolved PolicyTable is a
+trace-time constant, so the jitted train step must trace exactly once
+however many rules the table carries (the trace counter is recorded in
+the report).
+
+Examples::
+
+  # one mixed table vs the fp32 baseline, 20 steps
+  PYTHONPATH=src python -m repro.launch.sweep --arch granite-3-2b \
+      --reduced --steps 20 \
+      --point "conv=mitchell8,attn_score=bf16,dw=native,default=afm10"
+
+  # 2-site x 2-multiplier cross product (the CI smoke lane)
+  PYTHONPATH=src python -m repro.launch.sweep --arch granite-3-2b \
+      --reduced --steps 5 --seq 32 --batch 4 \
+      --cross-sites qkv,wd --cross-multipliers mitchell8,bf16 \
+      --out sweep_report.json
+
+Assignment grammar (core.policy.table_from_assignments): keys are site
+names (docs/policies.md), family names, pass names, or ``default``;
+values are ``native``, a multiplier name (mode=amsim — the fused LUT
+kernels), or ``mode:multiplier``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.core.policy import (NumericsPolicy, PolicyTable,
+                               table_from_assignments)
+from repro.data.pipeline import lm_batch
+from repro.models.transformer import init_lm, lm_loss
+from repro.optim.optimizers import cosine_schedule, make_optimizer
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig, TrainerState
+
+REPORT_SCHEMA = 1
+
+
+def run_point(cfg, policy, *, steps: int, batch: int, seq: int,
+              lr: float = 3e-4, seed: int = 0, log_fn=lambda s: None):
+    """Train ``steps`` optimizer steps under ``policy`` and return
+    (per-step losses, trace_count).
+
+    Every point starts from the same seeded init and consumes the same
+    step-indexed batches, so curves differ only by numerics.  The loss
+    function increments a Python-side counter when (re)traced — the
+    report's ``traces`` field, asserted == 1 by main().
+    """
+    traces = [0]
+
+    def loss_fn(p, b):
+        traces[0] += 1  # Python side effect: runs per TRACE, not per step
+        return lm_loss(p, b, cfg, policy)
+
+    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    opt = make_optimizer(cfg.optimizer, cosine_schedule(lr, max(steps // 10, 1),
+                                                        steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(loss_fn, opt))
+    shape = ShapeConfig("sweep", seq, batch, "train")
+    trainer = Trainer(step_fn, lambda s: lm_batch(cfg, shape, s),
+                      TrainerConfig(total_steps=steps, ckpt_dir=None,
+                                    log_every=1, log_fn=log_fn))
+    state = trainer.run(TrainerState(params, opt_state))
+    history = getattr(state, "history", [])
+    losses = [m["loss"] for _, m in history]
+    return losses, traces[0]
+
+
+def _expand_grid(args) -> list[tuple[str, PolicyTable]]:
+    """(label, table) per grid point from the three input forms."""
+    points: list[tuple[str, PolicyTable]] = []
+    for spec in args.point or []:
+        points.append((spec, table_from_assignments(spec)))
+    if args.cross_sites and args.cross_multipliers:
+        sites = [s.strip() for s in args.cross_sites.split(",") if s.strip()]
+        mults = [m.strip() for m in args.cross_multipliers.split(",")
+                 if m.strip()]
+        for site in sites:
+            for mult in mults:
+                spec = f"{site}={mult},default={args.cross_default}"
+                points.append((spec, table_from_assignments(spec)))
+    elif bool(args.cross_sites) != bool(args.cross_multipliers):
+        raise SystemExit("--cross-sites and --cross-multipliers go together")
+    if args.grid_json:
+        with open(args.grid_json) as f:
+            grid = json.load(f)
+        for spec in grid.get("points", []):
+            points.append((spec, table_from_assignments(spec)))
+    if not points:
+        raise SystemExit("no grid points: pass --point / --cross-sites + "
+                         "--cross-multipliers / --grid-json")
+    return points
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="per-site multiplier-assignment sweep (docs/policies.md)")
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--point", action="append", metavar="SPEC",
+                    help="assignment spec, e.g. 'conv=mitchell8,dw=native,"
+                         "default=afm10' (repeatable)")
+    ap.add_argument("--cross-sites", metavar="S1,S2",
+                    help="cross product: one point per (site, multiplier)")
+    ap.add_argument("--cross-multipliers", metavar="M1,M2")
+    ap.add_argument("--cross-default", default="native",
+                    help="default target for cross-product points")
+    ap.add_argument("--grid-json", metavar="PATH", default=None,
+                    help='grid file: {"points": ["<assignment spec>", ...]}')
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the fp32 baseline run")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write the comparison report JSON here")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    points = _expand_grid(args)
+    common = dict(steps=args.steps, batch=args.batch, seq=args.seq,
+                  lr=args.lr, seed=args.seed)
+
+    report = {"schema": REPORT_SCHEMA, "arch": cfg.name,
+              "reduced": bool(args.reduced), **common, "points": []}
+
+    baseline_final = None
+    if not args.no_baseline:
+        print(f"[sweep] baseline: native/fp32, {args.steps} steps")
+        t0 = time.time()
+        losses, traces = run_point(cfg, NumericsPolicy(), **common)
+        assert traces == 1, f"baseline retraced: {traces} traces"
+        baseline_final = losses[-1]
+        report["baseline"] = {"assign": "default=native", "losses": losses,
+                              "final_loss": losses[-1], "traces": traces,
+                              "seconds": round(time.time() - t0, 2)}
+        print(f"[sweep]   final loss {losses[-1]:.4f} "
+              f"({time.time() - t0:.1f}s)")
+
+    for spec, table in points:
+        print(f"[sweep] point: {spec}")
+        for line in table.describe():
+            print(f"[sweep]   {line}")
+        t0 = time.time()
+        losses, traces = run_point(
+            cfg, table, log_fn=lambda s: print(f"[sweep]   {s}"), **common)
+        assert traces == 1, \
+            f"point {spec!r} retraced: {traces} traces for {args.steps} steps"
+        entry = {"assign": spec, "rules": table.describe(), "losses": losses,
+                 "final_loss": losses[-1], "traces": traces,
+                 "seconds": round(time.time() - t0, 2)}
+        if baseline_final is not None:
+            entry["final_vs_baseline"] = losses[-1] - baseline_final
+            entry["rel_final"] = (losses[-1] / baseline_final
+                                  if baseline_final else None)
+        report["points"].append(entry)
+        tail = (f"  (baseline {baseline_final:.4f}, "
+                f"delta {entry['final_vs_baseline']:+.4f})"
+                if baseline_final is not None else "")
+        print(f"[sweep]   final loss {losses[-1]:.4f}{tail}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[sweep] wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

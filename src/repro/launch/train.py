@@ -20,6 +20,13 @@ and docs/numerics.md):
              shards it like any jnp program (no fused kernels).
   direct     pure-jnp bit-level multiplier model (paper's direct sim).
 
+Heterogeneous per-site numerics (docs/policies.md): ``--numerics-table
+table.json`` loads a PolicyTable, or ``--assign
+"conv=mitchell8,head=native"`` assigns multipliers per site on top of
+the ``--numerics``/``--multiplier`` default; the path report then
+prints one line per resolved rule.  ``launch/sweep.py`` runs grids of
+such assignments and reports convergence vs the fp32 baseline.
+
 Example (CPU, reduced config, sharded fused kernels on a debug mesh):
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
@@ -34,7 +41,8 @@ import jax
 
 from repro.configs import SHAPES, get_arch, reduced
 from repro.configs.base import ShapeConfig
-from repro.core.policy import MODES, NumericsPolicy
+from repro.core.policy import (MODES, NumericsPolicy, PolicyTable,
+                               table_from_assignments, table_from_json)
 from repro.data.pipeline import lm_batch
 from repro.distributed import shard_fused
 from repro.distributed.sharding import lm_param_pspecs, opt_state_pspecs
@@ -46,8 +54,28 @@ from repro.train.step import make_train_step
 from repro.train.trainer import Trainer, TrainerConfig, TrainerState
 
 
-def _describe_numerics(policy: NumericsPolicy, mesh) -> str:
-    """One honest line about which execution path this run lowers to."""
+def _describe_numerics(policy, mesh) -> str:
+    """An honest report of which execution path this run lowers to.
+
+    Flat policies keep the historical single line; a PolicyTable prints
+    the resolved per-site table — one line per distinct rule — plus the
+    execution-path note for its amsim rules."""
+    if isinstance(policy, PolicyTable):
+        lines = [f"numerics table ({len(policy.rules)} rules, resolved "
+                 f"per site/pass — docs/policies.md):"]
+        lines += [f"  {line}" for line in policy.describe()]
+        has_amsim = any(r.mode == "amsim" for r in policy.rules)
+        if has_amsim:
+            if mesh is None:
+                lines.append("  amsim rules: single-device fused LUT kernels")
+            elif shard_fused.env_enabled():
+                lines.append(f"  amsim rules: sharded fused LUT kernels on "
+                             f"mesh {dict(mesh.shape)} "
+                             f"(REPRO_SHARD_FUSED=0 to disable)")
+            else:
+                lines.append("  amsim rules: REPRO_SHARD_FUSED=0 — GSPMD "
+                             "fallback, kernels replicated per device")
+        return "\n".join(lines)
     if policy.mode != "amsim":
         return f"numerics={policy.mode}/{policy.multiplier}"
     if mesh is None:
@@ -79,6 +107,15 @@ def main():
     ap.add_argument("--multiplier", default="fp32",
                     help="approximate-multiplier name for non-native modes "
                          "(e.g. bf16, afm16, mitchell8, exact7)")
+    ap.add_argument("--numerics-table", metavar="PATH", default=None,
+                    help="heterogeneous per-site numerics: policy-table "
+                         "JSON (schema in docs/policies.md); overrides "
+                         "--numerics/--multiplier")
+    ap.add_argument("--assign", metavar="SPEC", default=None,
+                    help="per-site assignment shorthand, e.g. "
+                         "'conv=mitchell8,head=native,dw=native' — "
+                         "unassigned sites run --numerics/--multiplier "
+                         "(docs/policies.md)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -87,8 +124,19 @@ def main():
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    policy = (NumericsPolicy() if args.numerics == "native" else
-              NumericsPolicy(mode=args.numerics, multiplier=args.multiplier))
+    if args.numerics_table and args.assign:
+        ap.error("--numerics-table and --assign are mutually exclusive "
+                 "(put the assignments in the table JSON)")
+    if args.numerics_table:
+        policy = table_from_json(args.numerics_table)
+    elif args.assign:
+        default = (("native", "fp32") if args.numerics == "native"
+                   else (args.numerics, args.multiplier))
+        policy = table_from_assignments(args.assign, default=default)
+    else:
+        policy = (NumericsPolicy() if args.numerics == "native" else
+                  NumericsPolicy(mode=args.numerics,
+                                 multiplier=args.multiplier))
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
 
     ndev = len(jax.devices())

@@ -35,12 +35,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import Numerics
 from repro.distributed import shard_fused
 # NEG_INF is shared with the fused kernel and the einsum reference (one
 # constant — the fused/einsum bit-compatibility contract depends on it).
 from repro.kernels.common import attention_mask
-from repro.kernels.ops import (NEG_INF, attend_einsum,
+from repro.kernels.ops import (NEG_INF, attend_einsum, attention_fused_leaf,
                                fused_attention_enabled, policy_attention)
 from repro.models.layers import init_linear, linear
 
@@ -90,23 +90,26 @@ def _wsc(x, *spec):
     return jax.lax.with_sharding_constraint(x, P(*spec))
 
 
-def _derive_dispatch(ap: NumericsPolicy, q_shape, k_shape, *, causal: bool,
+def _derive_dispatch(ap: Numerics, q_shape, k_shape, *, causal: bool,
                      window: int) -> str:
     """The three-way attention dispatch, decided once per call:
 
-      * "sharded" — an active mesh (``shard_fused.active_mesh``:
-        mode="amsim" under a ``with mesh:`` context, REPRO_SHARD_FUSED
-        not killed) whose axes divide batch/KV-heads and whose
-        per-shard shape passes the kernel guards: the one-launch kernel
-        runs per shard via shard_map (KV heads over "model", batch over
-        the data axes).
+      * "sharded" — an active mesh (``shard_fused.active_mesh``: both
+        attention sites resolve to one amsim leaf under a ``with
+        mesh:`` context, REPRO_SHARD_FUSED not killed) whose axes
+        divide batch/KV-heads and whose per-shard shape passes the
+        kernel guards: the one-launch kernel runs per shard via
+        shard_map (KV heads over "model", batch over the data axes).
       * "fused"   — no ambient mesh: the single-device one-launch
         kernel (shape permitting, REPRO_ATTN_FUSED to kill).
-      * "einsum"  — everything else, including mesh-active shapes the
-        sharded path cannot take: the grouped-query einsum chain, which
-        GSPMD partitions natively.
+      * "einsum"  — everything else: policies whose score/value sites
+        resolve differently (the kernel bakes one LUT), mesh-active
+        shapes the sharded path cannot take, oversize shapes, kill
+        switches — the grouped-query einsum chain, which GSPMD
+        partitions natively and which honours per-site splits.
     """
-    mesh = shard_fused.active_mesh(ap)
+    leaf = attention_fused_leaf(ap)
+    mesh = shard_fused.active_mesh(leaf) if leaf is not None else None
     if mesh is not None:
         if shard_fused.attention_supported(ap, mesh, q_shape, k_shape,
                                            causal=causal, window=window):
@@ -118,7 +121,7 @@ def _derive_dispatch(ap: NumericsPolicy, q_shape, k_shape, *, causal: bool,
     return "einsum"
 
 
-def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
+def _attend_fullhead(q, k, v, q_pos, k_pos, policy: Numerics, *,
                      causal: bool, window: int, daxes,
                      dispatch: str | None = None):
     """§Perf optimisation: repeat KV to full head count and shard the head
@@ -128,39 +131,39 @@ def _attend_fullhead(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
     B, S, H, dh = q.shape
     KV = k.shape[2]
     G = H // KV
-    ap = policy.for_attention()
     if dispatch is None:  # direct callers: derive the dispatch locally
-        dispatch = _derive_dispatch(ap, q.shape, k.shape, causal=causal,
+        dispatch = _derive_dispatch(policy, q.shape, k.shape, causal=causal,
                                     window=window)
     if dispatch == "sharded":
         # Head sharding is native to the sharded fused kernel (KV heads
         # over "model"), on the original *grouped* K/V — the explicit
         # repeat+constraint dance below exists only for the einsum path.
         return shard_fused.sharded_attention(
-            q, k, v, q_pos, k_pos, ap, causal=causal, window=window,
-            mesh=shard_fused.active_mesh(ap))
+            q, k, v, q_pos, k_pos, policy, causal=causal, window=window,
+            mesh=shard_fused.active_mesh(attention_fused_leaf(policy)))
     if dispatch == "fused":
         # Single device: sharding constraints are no-ops, so the fused
         # one-launch kernel takes the call — on the original *grouped*
         # K/V (it folds G into its gather rows), skipping the G-fold
         # repeat below that the einsum layout needs.
-        return policy_attention(q, k, v, q_pos, k_pos, ap, causal, window)
+        return policy_attention(q, k, v, q_pos, k_pos, policy, causal, window)
     if G > 1:
         k = jnp.repeat(k, G, axis=2)
         v = jnp.repeat(v, G, axis=2)
     q = _wsc(q, daxes, None, "model", None)
     k = _wsc(k, daxes, None, "model", None)
     v = _wsc(v, daxes, None, "model", None)
-    scores = ap.einsum("bqhd,bthd->bhqt", q, k) / jnp.sqrt(float(dh))
+    scores = policy.einsum("bqhd,bthd->bhqt", q, k,
+                           site="attn_score") / jnp.sqrt(float(dh))
     scores = _wsc(scores, daxes, "model", None, None)
     mask = attention_mask(q_pos, k_pos, causal=causal, window=window)
     probs = jax.nn.softmax(
         jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF), -1)
-    out = ap.einsum("bhqt,bthd->bqhd", probs, v)
+    out = policy.einsum("bhqt,bthd->bqhd", probs, v, site="attn_value")
     return _wsc(out, daxes, None, "model", None)
 
 
-def _attend(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
+def _attend(q, k, v, q_pos, k_pos, policy: Numerics, *,
             causal: bool, window: int, dispatch: str | None = None):
     """q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H,dh).
 
@@ -171,22 +174,22 @@ def _attend(q, k, v, q_pos, k_pos, policy: NumericsPolicy, *,
     dispatch can never disagree; direct callers may leave it None to
     self-derive.  k_pos holds the *absolute* position of every KV slot;
     negative means unwritten (ring-buffer cache) and is masked out.
+    The "attn_score"/"attn_value" sites resolve inside each lowering.
     """
-    ap = policy.for_attention()
     if dispatch is None:
-        dispatch = _derive_dispatch(ap, q.shape, k.shape, causal=causal,
+        dispatch = _derive_dispatch(policy, q.shape, k.shape, causal=causal,
                                     window=window)
     if dispatch == "sharded":
         return shard_fused.sharded_attention(
-            q, k, v, q_pos, k_pos, ap, causal=causal, window=window,
-            mesh=shard_fused.active_mesh(ap))
+            q, k, v, q_pos, k_pos, policy, causal=causal, window=window,
+            mesh=shard_fused.active_mesh(attention_fused_leaf(policy)))
     if dispatch == "fused":
-        return policy_attention(q, k, v, q_pos, k_pos, ap, causal, window)
-    return attend_einsum(q, k, v, q_pos, k_pos, ap, causal=causal,
+        return policy_attention(q, k, v, q_pos, k_pos, policy, causal, window)
+    return attend_einsum(q, k, v, q_pos, k_pos, policy, causal=causal,
                          window=window)
 
 
-def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
+def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
               kv_src=None, causal=True, q_offset=0, cache=None,
               window: int = 0, q_chunk: int | None = None,
               use_rope: bool = True):
@@ -201,11 +204,16 @@ def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
     # QKV projections are column-parallel, the output projection below is
     # row-parallel (sharding._RULES) — under an active mesh in amsim mode
     # each runs the fused LUT kernel per shard (distributed/shard_fused).
-    q = linear(p["wq"], x, policy, kind="column").reshape(B, S, H, dh)
+    # Numerics sites: projections are "qkv"/"wo"; the score/value
+    # contractions below resolve "attn_score"/"attn_value".
+    q = linear(p["wq"], x, policy, kind="column",
+               site="qkv").reshape(B, S, H, dh)
     src = x if kv_src is None else kv_src
     Tsrc = src.shape[1]
-    k = linear(p["wk"], src, policy, kind="column").reshape(B, Tsrc, KV, dh)
-    v = linear(p["wv"], src, policy, kind="column").reshape(B, Tsrc, KV, dh)
+    k = linear(p["wk"], src, policy, kind="column",
+               site="qkv").reshape(B, Tsrc, KV, dh)
+    v = linear(p["wv"], src, policy, kind="column",
+               site="qkv").reshape(B, Tsrc, KV, dh)
 
     start = cache["len"] if cache is not None else q_offset
     q_pos = start + jnp.arange(S, dtype=jnp.int32)
@@ -258,7 +266,7 @@ def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
     # dispatch can never drift apart (skipping the scan while the inner
     # call fell back to einsum would rematerialise the full score
     # tensor the scan exists to bound).
-    dispatch = _derive_dispatch(policy.for_attention(), q.shape, k.shape,
+    dispatch = _derive_dispatch(policy, q.shape, k.shape,
                                 causal=causal, window=window)
     if dispatch == "fused" and cfg.shard_attn_heads \
             and jax.device_count() > 1:
@@ -295,7 +303,8 @@ def attention(p, x, cfg: ArchConfig, policy: NumericsPolicy, *,
             out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
     else:
         out = attend(q, q_pos)
-    return linear(p["wo"], out.reshape(B, S, H * dh), policy), cache
+    return linear(p["wo"], out.reshape(B, S, H * dh), policy,
+                  kind="row", site="wo"), cache
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int):

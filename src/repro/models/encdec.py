@@ -93,7 +93,7 @@ def decode(params, tokens, enc_out, cfg: ArchConfig, policy: NumericsPolicy,
 
     x, new_caches = jax.lax.scan(scan_fn, x, xs)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = linear(params["head"], x, policy)
+    logits = linear(params["head"], x, policy, site="head")
     return logits, (new_caches if caches is not None else None)
 
 

@@ -12,14 +12,17 @@ vanishing fraction of FLOPs and are not in the paper's scope.
 mirroring ``distributed/sharding._RULES``) so that under an active mesh
 ``mode="amsim"`` lowers to the per-shard fused LUT kernels via
 ``distributed/shard_fused`` instead of GSPMD's replicated-kernel
-fallback (kill switch and knobs: docs/configuration.md).
+fallback (kill switch and knobs: docs/configuration.md) — and the
+layer's numerics ``site`` label (``core.policy.SITES``), which a
+:class:`~repro.core.policy.PolicyTable` resolves to per-site,
+per-pass ``(mode, multiplier)`` leaves (docs/policies.md).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import Numerics, NumericsPolicy
 from repro.distributed.shard_fused import parallel_matmul
 
 
@@ -31,8 +34,9 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False, scale=None):
     return p
 
 
-def linear(p, x, policy: NumericsPolicy, kind: str | None = None):
-    y = parallel_matmul(x, p["w"], policy, kind)
+def linear(p, x, policy: Numerics, kind: str | None = None,
+           site: str | None = None):
+    y = parallel_matmul(x, p["w"], policy, kind, site)
     if "b" in p:
         y = y + p["b"]
     return y
@@ -46,11 +50,12 @@ def embed(p, ids):
     return jnp.take(p["emb"], ids, axis=0)
 
 
-def unembed(p, x, policy: NumericsPolicy):
+def unembed(p, x, policy: Numerics):
     """Tied LM head: x @ emb^T (a GEMM -> routed through the policy).
     Vocab-parallel under the sharded fused path: emb^T's output dim is
-    the "model"-sharded vocab, i.e. a column-parallel matmul."""
-    return parallel_matmul(x, p["emb"].T, policy, "column")
+    the "model"-sharded vocab, i.e. a column-parallel matmul.  Numerics
+    site "unembed" (distinct from the untied "head")."""
+    return parallel_matmul(x, p["emb"].T, policy, "column", "unembed")
 
 
 def init_rmsnorm(d: int):

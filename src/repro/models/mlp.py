@@ -25,14 +25,16 @@ def init_ffn(key, d: int, d_ff: int, act: str = "swiglu"):
 def ffn(p, x, policy: NumericsPolicy, act: str = "swiglu"):
     # Megatron roles (sharding._RULES): wg/wu column-parallel, wd
     # row-parallel — under an active mesh + mode="amsim" each lowers to
-    # the per-shard fused LUT kernel (distributed/shard_fused).
+    # the per-shard fused LUT kernel (distributed/shard_fused).  The
+    # numerics sites mirror the roles ("wg"/"wu"/"wd"), so a policy
+    # table can assign each projection its own multiplier.
     if act == "swiglu":
         return linear(
             p["wd"],
-            jax.nn.silu(linear(p["wg"], x, policy, kind="column"))
-            * linear(p["wu"], x, policy, kind="column"),
-            policy, kind="row",
+            jax.nn.silu(linear(p["wg"], x, policy, kind="column", site="wg"))
+            * linear(p["wu"], x, policy, kind="column", site="wu"),
+            policy, kind="row", site="wd",
         )
     return linear(p["wd"], jax.nn.gelu(linear(p["wu"], x, policy,
-                                              kind="column")),
-                  policy, kind="row")
+                                              kind="column", site="wu")),
+                  policy, kind="row", site="wd")

@@ -50,7 +50,7 @@ def moe_ffn(p, x, cfg: ArchConfig, policy: NumericsPolicy):
     C = _round_up(max(int(T * k * m.capacity_factor / E), 1), 8)
     xf = x.reshape(T, d)
 
-    logits = policy.matmul(xf, p["router"]["w"])          # (T, E)
+    logits = policy.matmul(xf, p["router"]["w"], site="router")   # (T, E)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     gate, sel = jax.lax.top_k(probs, k)                   # (T, k)
     gate = gate / jnp.sum(gate, axis=-1, keepdims=True)

@@ -73,7 +73,7 @@ def mamba2(p, u, cfg: ArchConfig, policy: NumericsPolicy, *, cache=None):
     B_, L, _ = u.shape
     hp, N, Q = s.head_dim, s.d_state, s.chunk
 
-    zxbcdt = linear(p["in_proj"], u, policy)
+    zxbcdt = linear(p["in_proj"], u, policy, site="ssm")
     z, xs, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
     xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
 
@@ -115,7 +115,7 @@ def mamba2(p, u, cfg: ArchConfig, policy: NumericsPolicy, *, cache=None):
     y = y + p["D"][None, None, :, None] * xs            # skip connection
     y = y.reshape(B_, L, d_in) * jax.nn.silu(z)
     y = rmsnorm(p["norm"], y, cfg.norm_eps)
-    return linear(p["out_proj"], y, policy), new_cache
+    return linear(p["out_proj"], y, policy, site="ssm"), new_cache
 
 
 def _ssd_chunked(xdt, Bc, Cc, dA, Q: int, policy: NumericsPolicy):
@@ -130,17 +130,19 @@ def _ssd_chunked(xdt, Bc, Cc, dA, Q: int, policy: NumericsPolicy):
     dAc = dA.reshape(B_, c, Q, nh)
     cum = jnp.cumsum(dAc, axis=2)                       # (B,c,Q,nh)
 
-    # --- intra-chunk: attention-like masked matmul
-    scores = policy.einsum("bcln,bcsn->bcls", Ccc, Bcc)  # (B,c,Q,Q)
+    # --- intra-chunk: attention-like masked matmul (all SSD einsums
+    # resolve under the single "ssm" site — gemm family)
+    scores = policy.einsum("bcln,bcsn->bcls", Ccc, Bcc, site="ssm")
     decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # l,s -> (B,c,Q,Q,nh)
     li = jnp.arange(Q)
     mask = (li[:, None] >= li[None, :])[None, None, :, :, None]
     Tm = jnp.where(mask, jnp.exp(decay), 0.0) * scores[..., None]  # (B,c,Q,Q,nh)
-    y_intra = policy.einsum("bclsh,bcshp->bclhp", Tm, xc)
+    y_intra = policy.einsum("bclsh,bcshp->bclhp", Tm, xc, site="ssm")
 
     # --- chunk states: S_c = sum_s exp(cum_last - cum_s) B_s x_s^T
     to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,c,Q,nh)
-    Sc = policy.einsum("bcsn,bcshp->bchpn", Bcc, xc * to_end[..., None])
+    Sc = policy.einsum("bcsn,bcshp->bchpn", Bcc, xc * to_end[..., None],
+                       site="ssm")
 
     # --- inter-chunk recurrence over c (sequential scan)
     seg = jnp.exp(cum[:, :, -1, :])                     # (B,c,nh) chunk decay
@@ -153,7 +155,7 @@ def _ssd_chunked(xdt, Bc, Cc, dA, Q: int, policy: NumericsPolicy):
     h0 = jnp.zeros((B_, nh, hp, N), jnp.float32)
     _, hs = jax.lax.scan(step, h0, jnp.arange(c))
     hs = jnp.moveaxis(hs, 0, 1)                         # (B,c,nh,hp,N) entering
-    y_inter = policy.einsum("bcln,bchpn->bclhp", Ccc, hs)
+    y_inter = policy.einsum("bcln,bchpn->bclhp", Ccc, hs, site="ssm")
     y_inter = y_inter * jnp.exp(cum)[..., None]
     return (y_intra + y_inter).reshape(B_, L, nh, hp)
 

@@ -175,7 +175,7 @@ def lm_forward(params, tokens, cfg: ArchConfig, policy: NumericsPolicy, *,
         logits = unembed(params["embed"], x, policy)
     else:
         # Vocab-parallel head (sharding._RULES: head/w -> ("F", "model")).
-        logits = linear(params["head"], x, policy, kind="column")
+        logits = linear(params["head"], x, policy, kind="column", site="head")
     if cfg.constrain_logits:
         # §Perf: vocab-parallel cross-entropy — keep logits sharded over
         # "model" through the loss (logsumexp reduces locally + tiny AR)

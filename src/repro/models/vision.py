@@ -83,8 +83,9 @@ def vision_forward(params, x, cfg: VisionConfig, policy: NumericsPolicy):
     if cfg.kind == "mlp":
         h = x.reshape(x.shape[0], -1)
         for i, lp in enumerate(params["dense"]):
-            h = linear(lp, h, policy)
-            if i < len(params["dense"]) - 1:
+            last = i == len(params["dense"]) - 1
+            h = linear(lp, h, policy, site="head" if last else "dense")
+            if not last:
                 h = jax.nn.relu(h)
         return h
     if cfg.kind == "cnn":
@@ -94,8 +95,9 @@ def vision_forward(params, x, cfg: VisionConfig, policy: NumericsPolicy):
             h = _avgpool(h)
         h = h.reshape(h.shape[0], -1)
         for i, lp in enumerate(params["dense"]):
-            h = linear(lp, h, policy)
-            if i < len(params["dense"]) - 1:
+            last = i == len(params["dense"]) - 1
+            h = linear(lp, h, policy, site="head" if last else "dense")
+            if not last:
                 h = jax.nn.relu(h)
         return h
     if cfg.kind == "resnet":
@@ -112,7 +114,7 @@ def vision_forward(params, x, cfg: VisionConfig, policy: NumericsPolicy):
                     sc = _avgpool(h, stride)
                 h = jax.nn.relu(r + sc)
         h = jnp.mean(h, axis=(1, 2))
-        return linear(params["head"], h, policy)
+        return linear(params["head"], h, policy, site="head")
     raise ValueError(cfg.kind)
 
 

@@ -29,11 +29,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.policy import NumericsPolicy
+from repro.core.policy import Numerics
 from repro.models.transformer import init_lm_caches, lm_forward
 
 
-def make_prefill(cfg: ArchConfig, policy: NumericsPolicy, max_len: int):
+def make_prefill(cfg: ArchConfig, policy: Numerics, max_len: int):
     def prefill(params, tokens, caches):
         """tokens (B, S_prompt) -> (next_token (B,1), caches)."""
         logits, caches, _ = lm_forward(params, tokens, cfg, policy,
@@ -43,7 +43,7 @@ def make_prefill(cfg: ArchConfig, policy: NumericsPolicy, max_len: int):
     return prefill
 
 
-def make_serve_step(cfg: ArchConfig, policy: NumericsPolicy,
+def make_serve_step(cfg: ArchConfig, policy: Numerics,
                     window: Optional[int] = None):
     def serve_step(params, tokens, caches):
         """One decode step: tokens (B, 1) -> (logits, next_token, caches)."""
@@ -55,9 +55,15 @@ def make_serve_step(cfg: ArchConfig, policy: NumericsPolicy,
 
 
 class ServingEngine:
-    """Greedy batched generation driver over prefill + decode."""
+    """Greedy batched generation driver over prefill + decode.
 
-    def __init__(self, cfg: ArchConfig, policy: NumericsPolicy,
+    ``policy`` is a flat NumericsPolicy or a per-site PolicyTable
+    (docs/policies.md): the site labels thread through lm_forward into
+    prefill and every decode step, so heterogeneous tables serve with
+    exactly the numerics they train with — per-site resolution is
+    trace-time, adding zero per-token dispatch cost."""
+
+    def __init__(self, cfg: ArchConfig, policy: Numerics,
                  params, max_len: int = 512, mesh=None):
         self.cfg, self.policy, self.params = cfg, policy, params
         self.max_len = max_len

@@ -1,0 +1,108 @@
+"""launch/sweep.py: the multiplier-assignment sweep runner.
+
+Tier-1 drives a tiny in-process sweep (grid expansion, report schema,
+baseline comparison, no-retrace assertion); the full mixed-table
+20-step acceptance run and the full cross-product grid ride the slow
+tier (nightly cron).
+"""
+import json
+
+import pytest
+
+from repro.launch import sweep
+
+
+def _run(argv):
+    return sweep.main(argv)
+
+
+def test_sweep_smoke_report(tmp_path):
+    out = tmp_path / "report.json"
+    report = _run([
+        "--arch", "granite-3-2b", "--reduced", "--steps", "2",
+        "--batch", "2", "--seq", "16",
+        "--point", "qkv=amsim_jnp:mitchell8,default=native",
+        "--out", str(out),
+    ])
+    on_disk = json.loads(out.read_text())
+    assert on_disk["schema"] == report["schema"] == sweep.REPORT_SCHEMA
+    assert len(report["points"]) == 1
+    pt = report["points"][0]
+    assert len(pt["losses"]) == 2 and pt["traces"] == 1
+    assert "final_vs_baseline" in pt and "rules" in pt
+    assert len(report["baseline"]["losses"]) == 2
+    assert report["baseline"]["traces"] == 1
+
+
+def test_sweep_cross_product_expansion(tmp_path):
+    report = _run([
+        "--arch", "granite-3-2b", "--reduced", "--steps", "1",
+        "--batch", "2", "--seq", "16", "--no-baseline",
+        "--cross-sites", "qkv,wd",
+        "--cross-multipliers", "amsim_jnp:mitchell8,amsim_jnp:bf16",
+    ])
+    assert len(report["points"]) == 4
+    assigns = [p["assign"] for p in report["points"]]
+    assert "qkv=amsim_jnp:mitchell8,default=native" in assigns
+    assert "wd=amsim_jnp:bf16,default=native" in assigns
+    assert "baseline" not in report
+
+
+def test_sweep_grid_json_and_bad_args(tmp_path):
+    grid = tmp_path / "grid.json"
+    grid.write_text(json.dumps(
+        {"points": ["head=amsim_jnp:bf16,default=native"]}))
+    report = _run([
+        "--arch", "granite-3-2b", "--reduced", "--steps", "1",
+        "--batch", "2", "--seq", "16", "--no-baseline",
+        "--grid-json", str(grid),
+    ])
+    assert report["points"][0]["assign"].startswith("head=")
+    with pytest.raises(SystemExit):
+        _run(["--steps", "1"])  # no grid points
+    with pytest.raises(SystemExit):
+        _run(["--steps", "1", "--cross-sites", "qkv"])  # half a cross
+
+
+@pytest.mark.slow
+def test_sweep_mixed_table_20_steps():
+    """Acceptance: the mixed table (conv=mitchell8, attn_score=bf16,
+    dw=native, rest afm10) trains 20 steps with per-step losses logged,
+    a baseline comparison, and no retrace-per-step.  (The conv rule is
+    validated but inert on the LM arch — the granite stack has no conv
+    site; vision runs exercise it via examples/train_lenet_approx.)"""
+    report = _run([
+        "--arch", "granite-3-2b", "--reduced", "--steps", "20",
+        "--batch", "4", "--seq", "32",
+        "--point", "conv=mitchell8,attn_score=bf16,dw=native,default=afm10",
+    ])
+    pt = report["points"][0]
+    assert len(pt["losses"]) == 20 and pt["traces"] == 1
+    base = report["baseline"]
+    assert len(base["losses"]) == 20 and base["traces"] == 1
+    # the report compares against fp32: delta and ratio recorded, and a
+    # single-site-mixed 20-step run stays in the same loss regime
+    # (coarse sanity — per-step noise makes endpoint monotonicity flaky)
+    assert "final_vs_baseline" in pt and pt["rel_final"] is not None
+    assert abs(pt["final_loss"] - base["final_loss"]) / base["final_loss"] \
+        < 0.1, pt
+
+
+@pytest.mark.slow
+def test_sweep_full_grid_nightly():
+    """The full 2-site x 2-multiplier fused-kernel grid (amsim mode) at
+    20 steps — the paper-style comparison matrix, nightly only."""
+    report = _run([
+        "--arch", "granite-3-2b", "--reduced", "--steps", "20",
+        "--batch", "4", "--seq", "32",
+        "--cross-sites", "qkv,wd",
+        "--cross-multipliers", "mitchell8,bf16",
+        "--cross-default", "native",
+    ])
+    assert len(report["points"]) == 4
+    base = report["baseline"]["final_loss"]
+    for pt in report["points"]:
+        assert pt["traces"] == 1 and len(pt["losses"]) == 20
+        # single-site approximation on a 20-step reduced run stays in
+        # the same loss regime as fp32 (coarse sanity, not a paper claim)
+        assert abs(pt["final_loss"] - base) / base < 0.2, pt

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
-"""Docs lint: dead-link check + env-var reference sync (CI docs job).
+"""Docs lint: dead links + env-var and site-registry sync (CI docs job).
 
-Two checks, stdlib only (run from the repo root, or pass it as argv[1]):
+Three checks, stdlib only (run from the repo root, or pass it as argv[1]):
 
 1. **Links** — every relative markdown link in README.md and docs/*.md
    must resolve to an existing file (anchors stripped; http/mailto
@@ -11,11 +11,17 @@ Two checks, stdlib only (run from the repo root, or pass it as argv[1]):
    documented in docs/configuration.md, and every variable documented
    there must still exist in the code.  Docs rot fails the build in
    both directions.
+3. **Numerics sites** — the site-registry table in docs/policies.md
+   must list exactly the sites in ``core.policy.SITES`` (parsed from
+   source with ``ast``, no repo imports).  Adding a site to the code
+   without documenting it — or documenting a site the code dropped —
+   fails the build.
 
 Exit status: 0 clean, 1 with findings (printed one per line).
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -74,16 +80,63 @@ def check_env_sync(root: Path) -> list[str]:
     return errors
 
 
+def code_sites(root: Path) -> set[str] | None:
+    """``core.policy.SITES`` parsed from source (ast, no imports)."""
+    src = root / "src" / "repro" / "core" / "policy.py"
+    if not src.exists():
+        return None
+    tree = ast.parse(src.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "SITES":
+                    val = ast.literal_eval(node.value)
+                    return set(val)
+    return None
+
+
+# docs/policies.md site-registry rows: "| `site` | family | where |"
+SITE_ROW_RE = re.compile(r"^\|\s*`([a-z_]+)`\s*\|", re.MULTILINE)
+
+
+def documented_sites(root: Path) -> set[str] | None:
+    md = root / "docs" / "policies.md"
+    if not md.exists():
+        return None
+    text = md.read_text()
+    m = re.search(r"## Site registry\n(.*?)(?:\n## |\Z)", text, re.DOTALL)
+    if not m:
+        return None
+    return set(SITE_ROW_RE.findall(m.group(1))) - {"site"}
+
+
+def check_site_sync(root: Path) -> list[str]:
+    code = code_sites(root)
+    if code is None:
+        return ["core/policy.py: SITES registry not found"]
+    docs = documented_sites(root)
+    if docs is None:
+        return ["docs/policies.md: '## Site registry' table missing"]
+    errors = []
+    for s in sorted(code - docs):
+        errors.append(f"docs/policies.md: site `{s}` is in core.policy.SITES "
+                      f"but missing from the registry table")
+    for s in sorted(docs - code):
+        errors.append(f"docs/policies.md: site `{s}` is documented but not "
+                      f"in core.policy.SITES")
+    return errors
+
+
 def main() -> int:
     root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
     root = root.resolve()
-    errors = check_links(root) + check_env_sync(root)
+    errors = check_links(root) + check_env_sync(root) + check_site_sync(root)
     for e in errors:
         print(f"FAIL {e}")
     if not errors:
         n = sum(1 for _ in md_files(root))
-        print(f"docs OK: {n} markdown files, links + env-var reference "
-              f"in sync")
+        print(f"docs OK: {n} markdown files, links + env-var reference + "
+              f"site registry in sync")
     return 1 if errors else 0
 
 
