@@ -1,0 +1,139 @@
+"""Continuous-batching serving throughput (docs/serving.md), measured.
+
+Replays a mixed-tier ragged request stream (half native, half
+amsim_jnp:mitchell8 — every request carries its own numerics tier)
+through the paged ``ContinuousBatchingEngine`` and compares against the
+naive alternative: one dedicated uniform-policy ``ServingEngine`` per
+tier, serving the same requests one at a time (B=1, run to completion).
+
+Rows:
+  serving_stream_toks_per_s       informational: mixed-tier stream
+                                  throughput under continuous batching
+  serving_serial_toks_per_s       informational: same requests, serial
+                                  per-tier uniform engines
+  serving_continuous_vs_serial    **gated**: continuous/serial wall-time
+                                  ratio.  At CI scale (tiny model, CPU,
+                                  einsum decode) per-step cost is
+                                  compute-proportional, not launch-bound
+                                  — batching buys nothing — so the ratio
+                                  isolates the scheduler's own overhead:
+                                  page-table gather/scatter, per-tick
+                                  host control upload, per-tier lane
+                                  dispatch (~1.2x observed locally; the
+                                  batching upside only appears on
+                                  launch-bound backends).  The norm
+                                  clamps below at 1.0 (a "faster"
+                                  continuous run can never mis-seed the
+                                  baseline), and the 15% CI drift gate
+                                  fails once that overhead grows >15%
+                                  over the committed baseline.
+  serving_decode_traces           trace-counter contract: each tier lane
+                                  traces its decode step exactly once
+                                  for the whole stream (asserts, and
+                                  fails the bench outright on retrace).
+
+Both sides are warmed with the same prompt-length buckets first, so the
+comparison is steady-state throughput, not compile time.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_arch, reduced
+from repro.core.policy import NumericsPolicy
+from repro.models.transformer import init_lm
+from repro.serve.engine import ServingEngine
+from repro.serve.scheduler import ContinuousBatchingEngine
+
+_NEW_TOKENS = 8
+_CAPACITY = 3
+_PAGE = 8
+# Two length buckets keep the serial baseline's per-length prefill
+# retraces bounded (and warmed) on both sides.
+_PLENS = (8, 12)
+_CLAMP = 1.0
+
+
+def _stream(rng, n, vocab, tier_names):
+    reqs = []
+    for i in range(n):
+        plen = _PLENS[i % len(_PLENS)]
+        prompt = rng.integers(1, vocab, size=plen)
+        reqs.append((i, prompt, _NEW_TOKENS, tier_names[i % len(tier_names)]))
+    return reqs
+
+
+def main(smoke: bool = False) -> None:
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    tiers = {"exact": NumericsPolicy(),
+             "cheap": NumericsPolicy(mode="amsim_jnp",
+                                     multiplier="mitchell8")}
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_reqs = 6 if smoke else 12
+    max_len = max(_PLENS) + _NEW_TOKENS + 1
+    reqs = _stream(rng, n_reqs, cfg.vocab, sorted(tiers))
+
+    # --- continuous batching: one engine reused across timed runs so the
+    # per-lane jit caches stay warm (fresh engines would recompile).
+    cbe = ContinuousBatchingEngine(cfg, tiers, params, max_len=max_len,
+                                   capacity=_CAPACITY, page_size=_PAGE)
+    cbe.run(reqs)  # warm: traces every bucket + both decode lanes
+
+    # --- serial baseline: dedicated uniform engine per tier, B=1.
+    engines = {n: ServingEngine(cfg, p, params, max_len=max_len)
+               for n, p in tiers.items()}
+
+    def serial():
+        for _, prompt, new, tier in reqs:
+            jax.block_until_ready(
+                engines[tier].generate(jnp.asarray([prompt], jnp.int32),
+                                       max_new_tokens=new))
+    serial()  # warm both length buckets per engine
+
+    def once(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    # Interleave best-of-N on both sides so a burst of box noise cannot
+    # land entirely on one of them (same scheme as bench_policy_table).
+    t_cont = t_serial = float("inf")
+    for _ in range(3 if smoke else 4):
+        t_cont = min(t_cont, once(lambda: cbe.run(reqs)))
+        t_serial = min(t_serial, once(serial))
+    total = n_reqs * _NEW_TOKENS
+    emit("serving_stream_toks_per_s", t_cont,
+         f"{total / t_cont:.1f}toks_per_s_mixed_tier")
+    emit("serving_serial_toks_per_s", t_serial,
+         f"{total / t_serial:.1f}toks_per_s_uniform_B1")
+
+    ratio = t_cont / t_serial
+    emit("serving_continuous_vs_serial", 0.0,
+         f"{ratio:.3f}x_continuous_over_serial",
+         norm=max(ratio, _CLAMP), gate=True)
+
+    counts = cbe.decode_trace_counts
+    assert all(c == 1 for c in counts.values()), counts
+    emit("serving_decode_traces", 0.0,
+         "_".join(f"{n}{c}" for n, c in sorted(counts.items())) + "_(all_1)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small stream (CI bench gate)")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -24,7 +24,8 @@ def _sections(smoke: bool):
     # Smoke (the CI gate) imports only the engine benches; an
     # import-time error in an unused full-run module must not brick it.
     from benchmarks import (bench_attention, bench_batched_gemm,
-                            bench_conv2d, bench_policy_table)
+                            bench_conv2d, bench_policy_table,
+                            bench_serving)
 
     if smoke:
         return [
@@ -36,6 +37,8 @@ def _sections(smoke: bool):
              lambda: bench_attention.main(smoke=True)),
             ("Policy-table overhead (smoke)",
              lambda: bench_policy_table.main(smoke=True)),
+            ("Continuous-batching serving (smoke)",
+             lambda: bench_serving.main(smoke=True)),
         ]
     from benchmarks import (
         bench_convergence,
@@ -53,6 +56,7 @@ def _sections(smoke: bool):
         ("Fused approx-conv2d engine", bench_conv2d.main),
         ("Fused approx-attention engine", bench_attention.main),
         ("Policy-table overhead", bench_policy_table.main),
+        ("Continuous-batching serving", bench_serving.main),
         ("Fig.10/Table III convergence & accuracy", bench_convergence.main),
         ("Table IV cross-format matrix", bench_crossformat.main),
         ("Fig.11 pruning x multipliers", bench_pruning.main),

@@ -22,8 +22,10 @@ from repro.configs.base import ArchConfig, ShapeConfig
 def lm_batch(cfg: ArchConfig, shape: ShapeConfig, step: int, *,
              batch_override: int | None = None, seq_override: int | None = None):
     """Synthetic next-token LM batch for a given global step (jit-able)."""
-    B = batch_override or shape.global_batch
-    S = seq_override or shape.seq_len
+    # `is not None`, not truthiness: an explicit 0 override must win over
+    # the shape default (callers probe degenerate shapes with 0).
+    B = batch_override if batch_override is not None else shape.global_batch
+    S = seq_override if seq_override is not None else shape.seq_len
     key = jax.random.fold_in(jax.random.PRNGKey(1234), step)
     # encdec: frames feed the encoder, decoder keeps the full seq_len;
     # decoder-only frontends (vlm/audio-LM) consume seq positions.

@@ -146,6 +146,15 @@ def cache_pspecs(caches, mesh: Mesh, batch: int):
 
     def spec_for(path, leaf):
         s = _path_str(path)
+        if re.search(r"pool_(k|v)$", s) and leaf.ndim >= 4:
+            # Paged serving pools (L?, n_pages, page_size, KV, dh): KV
+            # heads over "model", matching the ring layout above so the
+            # einsum decode path contracts without resharding.  Pages are
+            # NOT data-sharded: any slot's page table may name any page,
+            # so the pool must be addressable from every data shard.
+            tail = (None, None, "model", None)
+            lead = (None,) * (leaf.ndim - 4)
+            return P(*_fix_divisibility(lead + tail, leaf.shape, mesh))
         if re.search(r"(^|/)(k|v)$", s) and leaf.ndim >= 4:
             # (L?, B, T, KV, dh): KV heads over model — the same layout
             # the sharded fused attention kernel consumes (shard_fused:

@@ -46,7 +46,7 @@ def _gather_gemm_tile(a, b, lut, acc, *, M: int, chunk: int, packed: bool):
 
 
 def attention_mask(q_pos, k_pos, *, causal: bool, window: int):
-    """(len(q_pos), len(k_pos)) bool validity mask — THE attention mask.
+    """(..., S, T) bool validity mask — THE attention mask.
 
     One definition shared by the fused kernel, the einsum reference and
     the full-head einsum path: the fused/einsum bit-compatibility
@@ -54,13 +54,20 @@ def attention_mask(q_pos, k_pos, *, causal: bool, window: int):
     carry its own copy.  A key is valid iff its absolute position is
     non-negative (negative = unwritten ring-buffer slot), not after the
     query (``causal``) and inside the sliding ``window`` (0 = off).
+
+    Positions may be 1-D (``(S,)``/``(T,)`` -> ``(S, T)``, the ring
+    buffer's shared layout) or carry a leading batch dim (``(B, S)`` /
+    ``(B, T)`` -> ``(B, S, T)``) for the paged serving cache, where
+    every slot sits at its own decode position (docs/serving.md).
     """
-    mask = jnp.broadcast_to((k_pos >= 0)[None, :],
-                            (q_pos.shape[0], k_pos.shape[0]))
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    shape = jnp.broadcast_shapes(qp.shape, kp.shape)
+    mask = jnp.broadcast_to(kp >= 0, shape)
     if causal:
-        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        mask = mask & (kp <= qp)
     if window:
-        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        mask = mask & (kp > qp - window)
     return mask
 
 

@@ -440,12 +440,16 @@ def attend_einsum(q, k, v, q_pos, k_pos, policy: Numerics, *,
 
     q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H,dh).  k_pos holds the
     *absolute* position of every KV slot; negative means unwritten
-    (ring-buffer cache) and is masked out.  The KV-head axis stays a
-    batch axis so KV is never materialised at full head count.  The two
-    contractions resolve under their own sites ("attn_score" /
-    "attn_value"), so a table can give the score and value GEMMs
-    different numerics — the einsum path is the only lowering that can
-    honour a split; the fused kernel requires them equal.
+    (ring-buffer cache) and is masked out.  Positions may be 1-D
+    (shared across the batch, the ring layout) or ``(B, S)``/``(B, T)``
+    for the paged serving cache where every slot sits at its own
+    position (docs/serving.md) — the mask then differs per batch row.
+    The KV-head axis stays a batch axis so KV is never materialised at
+    full head count.  The two contractions resolve under their own
+    sites ("attn_score" / "attn_value"), so a table can give the score
+    and value GEMMs different numerics — the einsum path is the only
+    lowering that can honour a split; the fused kernel requires them
+    equal.
     """
     B, S, H, dh = q.shape
     T, KV = k.shape[1], k.shape[2]
@@ -454,7 +458,10 @@ def attend_einsum(q, k, v, q_pos, k_pos, policy: Numerics, *,
     scores = policy_einsum("bqkgd,btkd->bkgqt", qg, k, policy,
                            "attn_score") / jnp.sqrt(float(dh))
     mask = attention_mask(q_pos, k_pos, causal=causal, window=window)
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    # (S, T) broadcasts over (B, KV, G); a per-row (B, S, T) mask slots
+    # its batch dim in front and broadcasts over (KV, G) only.
+    mask = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
     out = policy_einsum("bkgqt,btkd->bqkgd", probs, v, policy, "attn_value")
     return out.reshape(B, S, H, dh)

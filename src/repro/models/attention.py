@@ -157,8 +157,11 @@ def _attend_fullhead(q, k, v, q_pos, k_pos, policy: Numerics, *,
                            site="attn_score") / jnp.sqrt(float(dh))
     scores = _wsc(scores, daxes, "model", None, None)
     mask = attention_mask(q_pos, k_pos, causal=causal, window=window)
+    # Shared (S, T) mask broadcasts over (B, H); a per-row (B, S, T)
+    # mask (paged cache, per-slot positions) broadcasts over H only.
+    mask = mask[None, None] if mask.ndim == 2 else mask[:, None]
     probs = jax.nn.softmax(
-        jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF), -1)
+        jnp.where(mask, scores.astype(jnp.float32), NEG_INF), -1)
     out = policy.einsum("bhqt,bthd->bqhd", probs, v, site="attn_value")
     return _wsc(out, daxes, None, "model", None)
 
@@ -189,6 +192,55 @@ def _attend(q, k, v, q_pos, k_pos, policy: Numerics, *,
                          window=window)
 
 
+def _paged_cache_update(cache, k, v, q_pos):
+    """Slot-granular paged KV cache: write the fresh K/V through the page
+    table, gather the per-slot contiguous views.
+
+    ``cache`` keys (serve/paged_cache.py; docs/serving.md):
+
+      * ``pool_k``/``pool_v`` — (n_pages, page, KV, dh) shared page
+        pools (page 0 is the reserved trash page: never allocated, the
+        sink for every masked write).
+      * ``ptab``  — (B, n_ptab) int32 page table per slot; entry 0 =
+        unallocated (reads gather trash, masked by position validity).
+      * ``start`` — (B,) int32 tokens already resident per slot.
+      * ``live``  — (B,) bool slot liveness.  Dead rows write to the
+        trash page and report every key position unwritten, so a dead
+        slot can neither corrupt live pages nor attend to stale ones —
+        eviction is pure host-side bookkeeping, no device reset.
+
+    The page table / start / live arrays are HOST-authoritative: the
+    scheduler passes fresh ones into every step and ignores the copies
+    that ride along in the returned cache tree.  Token index t of a slot
+    always holds absolute position t (a paged cache never wraps — the
+    scheduler rejects requests longer than the table covers), so key
+    positions are derived, not stored: t is valid iff t < start + S.
+    Positions written past a slot's true length (padded prefill) are
+    simply never valid and get overwritten as decode advances.
+
+    Returns (k_view (B, T, KV, dh), v_view, k_pos (B, T), new_cache).
+    """
+    pool_k, pool_v = cache["pool_k"], cache["pool_v"]
+    ptab, live, start = cache["ptab"], cache["live"], cache["start"]
+    B, S = q_pos.shape
+    page_size, n_ptab = pool_k.shape[1], ptab.shape[1]
+    Tcap = n_ptab * page_size
+    ok = live[:, None] & (q_pos >= 0) & (q_pos < Tcap)
+    page = jnp.take_along_axis(
+        ptab, jnp.clip(q_pos // page_size, 0, n_ptab - 1), axis=1)
+    page = jnp.where(ok, page, 0)                     # masked -> trash page
+    off = jnp.where(ok, q_pos % page_size, 0)
+    cdt = pool_k.dtype
+    pool_k = pool_k.at[page, off].set(k.astype(cdt))
+    pool_v = pool_v.at[page, off].set(v.astype(cdt))
+    k_view = pool_k[ptab].reshape(B, Tcap, *pool_k.shape[2:])
+    v_view = pool_v[ptab].reshape(B, Tcap, *pool_v.shape[2:])
+    t = jnp.arange(Tcap, dtype=jnp.int32)[None]
+    valid = live[:, None] & (t < (start + S)[:, None])
+    k_pos = jnp.where(valid, t, jnp.int32(-(2 ** 30)))
+    return k_view, v_view, k_pos, dict(cache, pool_k=pool_k, pool_v=pool_v)
+
+
 def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
               kv_src=None, causal=True, q_offset=0, cache=None,
               window: int = 0, q_chunk: int | None = None,
@@ -197,7 +249,9 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
 
     kv_src: encoder states for cross-attention (no rope, no cache update
             semantics beyond plain K/V projection, causal=False expected).
-    cache:  {"k","v": (B, Tmax, KV, dh), "len": int32} for decode.
+    cache:  {"k","v": (B, Tmax, KV, dh), "len": int32} for decode (ring
+            buffer), or a paged-cache dict carrying a ``ptab`` page
+            table (``_paged_cache_update``; serve/paged_cache.py).
     """
     B, S, d = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -215,13 +269,26 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
     v = linear(p["wv"], src, policy, kind="column",
                site="qkv").reshape(B, Tsrc, KV, dh)
 
-    start = cache["len"] if cache is not None else q_offset
-    q_pos = start + jnp.arange(S, dtype=jnp.int32)
+    paged = cache is not None and "ptab" in cache
+    if paged:
+        # Paged serving cache (serve/paged_cache.py): every batch row is
+        # a scheduler slot sitting at its own decode position, so the
+        # position vector carries a batch dim and masking is per row.
+        if kv_src is not None:
+            raise ValueError("paged KV caches are decoder-self-attention "
+                             "only (no cross-attention)")
+        start = cache["start"]                                   # (B,)
+        q_pos = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    else:
+        start = cache["len"] if cache is not None else q_offset
+        q_pos = start + jnp.arange(S, dtype=jnp.int32)
     if use_rope and kv_src is None:
         q = rope(q, q_pos, cfg.rope_theta)
         k = rope(k, q_pos, cfg.rope_theta)  # fresh K written at the same offsets
 
-    if cache is not None:
+    if paged:
+        k, v, k_pos, cache = _paged_cache_update(cache, k, v, q_pos)
+    elif cache is not None:
         # Ring-buffer cache: write the S new KVs starting at slot
         # len % Tmax and record their absolute positions (sliding-window
         # decode keeps a cache of only `window` slots; masking is
@@ -266,8 +333,18 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
     # dispatch can never drift apart (skipping the scan while the inner
     # call fell back to einsum would rematerialise the full score
     # tensor the scan exists to bound).
-    dispatch = _derive_dispatch(policy, q.shape, k.shape,
-                                causal=causal, window=window)
+    if q_pos.ndim > 1:
+        # Per-slot positions (paged serving cache): the fused and
+        # sharded kernel lowerings consume ONE position vector shared
+        # across the batch, so batched-position calls always take the
+        # einsum chain — it masks per row, still resolves the
+        # attn_score/attn_value sites through the policy (the amsim
+        # contractions lower to the batched LUT GEMM kernel), and GSPMD
+        # partitions it natively under a mesh.
+        dispatch = "einsum"
+    else:
+        dispatch = _derive_dispatch(policy, q.shape, k.shape,
+                                    causal=causal, window=window)
     if dispatch == "fused" and cfg.shard_attn_heads \
             and jax.device_count() > 1:
         # Meshless multi-device + explicit head-sharding constraints:
@@ -292,13 +369,14 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
             # counts every chunk's score FLOPs (lax.map bodies cost once).
             outs = [
                 attend(q[:, i * q_chunk:(i + 1) * q_chunk],
-                       q_pos[i * q_chunk:(i + 1) * q_chunk])
+                       q_pos[..., i * q_chunk:(i + 1) * q_chunk])
                 for i in range(nc)
             ]
             out = jnp.concatenate(outs, axis=1)
         else:
             qc = q.reshape(B, nc, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
-            pc = q_pos.reshape(nc, q_chunk)
+            pc = (q_pos.reshape(nc, q_chunk) if q_pos.ndim == 1
+                  else q_pos.reshape(B, nc, q_chunk).transpose(1, 0, 2))
             out = jax.lax.map(lambda args: attend(*args), (qc, pc))
             out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
     else:

@@ -265,6 +265,30 @@ def init_lm_caches(cfg: ArchConfig, batch: int, max_len: int):
     raise ValueError(fam)
 
 
+def init_paged_lm_caches(cfg: ArchConfig, n_pages: int, page_size: int):
+    """Persistent device state of the paged serving cache: one K and one
+    V page pool per layer, stacked over the layer dim so the scan in
+    ``lm_forward`` threads them exactly like ring caches.
+
+    Everything else the paged attention path consumes (page table,
+    per-slot lengths, liveness) is host-authoritative control state the
+    scheduler merges in per step (serve/scheduler.py), so it is NOT part
+    of this tree.  Page 0 is the reserved trash page
+    (models/attention._paged_cache_update).  Paged serving covers the
+    families whose decode state is attention KV (dense, and moe with
+    interleave=1); SSM/hybrid recurrent state is O(1) per slot and needs
+    no paging — unsupported here until a scheduler lane carries it.
+    """
+    fam = cfg.family
+    if not (fam == "dense" or (fam == "moe" and cfg.moe.interleave == 1)):
+        raise NotImplementedError(
+            f"paged serving caches support dense/moe(interleave=1) "
+            f"stacks; {cfg.name} is family {fam!r}")
+    dt = jnp.dtype(cfg.cache_dtype)
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"pool_k": jnp.zeros(shape, dt), "pool_v": jnp.zeros(shape, dt)}
+
+
 # ---------------------------------------------------------------- loss
 def lm_loss(params, batch, cfg: ArchConfig, policy: NumericsPolicy,
             aux_weight: float = 0.01):

@@ -1,1 +1,7 @@
-from repro.serve.engine import ServingEngine, make_prefill, make_serve_step  # noqa: F401
+from repro.serve.engine import (ServingEngine, make_prefill,  # noqa: F401
+                                make_serve_step)
+from repro.serve.paged_cache import (TRASH_PAGE, PageAllocator,  # noqa: F401
+                                     pages_for)
+from repro.serve.scheduler import (ContinuousBatchingEngine,  # noqa: F401
+                                   Request, make_paged_prefill,
+                                   make_paged_serve_step)

@@ -64,9 +64,15 @@ class ServingEngine:
     trace-time, adding zero per-token dispatch cost."""
 
     def __init__(self, cfg: ArchConfig, policy: Numerics,
-                 params, max_len: int = 512, mesh=None):
+                 params, max_len: int = 512, mesh=None,
+                 window: Optional[int] = None):
         self.cfg, self.policy, self.params = cfg, policy, params
         self.max_len = max_len
+        # None -> the architecture's own sliding window (0 = off), same
+        # default lm_forward applies.  Previously this was never threaded
+        # into make_serve_step, so an explicit engine-level window was
+        # silently ignored by every decode step.
+        self.window = cfg.sliding_window if window is None else window
         self.mesh = mesh
         if mesh is not None:
             from repro.distributed.sharding import (lm_param_pspecs,
@@ -80,7 +86,7 @@ class ServingEngine:
         donate = () if jax.default_backend() == "cpu" else (2,)
         self.prefill = jax.jit(make_prefill(cfg, policy, max_len),
                                donate_argnums=donate)
-        self.step = jax.jit(make_serve_step(cfg, policy),
+        self.step = jax.jit(make_serve_step(cfg, policy, window=self.window),
                             donate_argnums=donate)
 
     def _ctx(self):
@@ -106,6 +112,15 @@ class ServingEngine:
         B = prompts.shape[0]
         if max_new_tokens <= 0:
             return jnp.zeros((B, 0), jnp.int32)
+        if prompts.shape[1] + max_new_tokens > self.max_len:
+            # The ring buffer would silently wrap and overwrite the oldest
+            # keys, corrupting every token after the wrap — fail loudly
+            # instead.  (prompt_len + max_new == max_len is fine: the last
+            # generated token is never written back to the cache.)
+            raise ValueError(
+                f"prompt length {prompts.shape[1]} + max_new_tokens "
+                f"{max_new_tokens} exceeds the engine's max_len "
+                f"{self.max_len}; raise max_len or shorten the request")
         with self._ctx():
             caches = init_lm_caches(self.cfg, B, self.max_len)
             if self.mesh is not None:

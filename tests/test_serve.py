@@ -47,6 +47,53 @@ def test_generate_matches_full_prefill_argmax(policy_name):
     _ORACLE_LOGITS[policy_name] = np.asarray(logits)
 
 
+def test_generate_rejects_ring_overflow():
+    """prompt + budget past max_len would silently wrap the KV ring and
+    corrupt everything after the wrap — must raise up front instead."""
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    params = init_lm(jax.random.PRNGKey(7), cfg)
+    engine = ServingEngine(cfg, NumericsPolicy(), params, max_len=16)
+    prompts = jax.random.randint(jax.random.PRNGKey(0), (1, 10), 0,
+                                 cfg.vocab, jnp.int32)
+    with pytest.raises(ValueError, match="max_len"):
+        engine.generate(prompts, max_new_tokens=7)
+    # Boundary: prompt_len + max_new == max_len is legal (the last
+    # generated token is never written back into the ring).
+    out = engine.generate(prompts, max_new_tokens=6)
+    assert out.shape == (1, 6)
+
+
+def test_engine_threads_window_into_decode_steps():
+    """The engine's window must reach every decode step — it used to be
+    dropped on the floor by __init__, so decode always ran at
+    lm_forward's own default regardless of what the engine was told."""
+    import dataclasses
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    assert cfg.sliding_window == 0
+    params = init_lm(jax.random.PRNGKey(3), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                                 cfg.vocab, jnp.int32)
+    W, T = 4, 6
+    pol = NumericsPolicy()
+    # Correctness anchor: an architecture-level window (prefill and
+    # decode agree) matches the fully-windowed recompute oracle.
+    cfgw = dataclasses.replace(cfg, sliding_window=W)
+    out = ServingEngine(cfgw, pol, params, max_len=16).generate(
+        prompts, max_new_tokens=T)
+    full = jnp.concatenate([prompts, out[:, :-1]], axis=1)
+    logits = lm_forward(params, full, cfgw, pol)[0]
+    pred = jnp.argmax(logits[:, prompts.shape[1] - 1:], axis=-1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(pred))
+    # Override witness: an engine-level window over a window-less config
+    # must change decode output (before the fix it was silently ignored,
+    # making these two runs identical).
+    outw = ServingEngine(cfg, pol, params, max_len=16,
+                         window=W).generate(prompts, max_new_tokens=T)
+    out0 = ServingEngine(cfg, pol, params, max_len=16).generate(
+        prompts, max_new_tokens=T)
+    assert not np.array_equal(np.asarray(outw), np.asarray(out0))
+
+
 def test_generate_policies_actually_differ():
     """Sanity: the two policies drove the engine through different logits
     (otherwise the parametrised test above proves less than it claims).

@@ -145,6 +145,21 @@ def test_lm_batch_step_indexed_deterministic():
                               np.asarray(b3["tokens"]))
 
 
+def test_lm_batch_overrides_respect_explicit_values():
+    """batch/seq overrides must be `is not None` checks: an explicit
+    override (including one that happens to be falsy in a refactor) may
+    never silently fall back to the shape defaults."""
+    cfg = reduced(get_arch("granite-3-2b"))
+    shape = ShapeConfig("t", 8, 32, "train")  # seq_len=8, global_batch=32
+    b = lm_batch(cfg, shape, 0, batch_override=4, seq_override=6)
+    assert b["tokens"].shape == (4, 6)
+    # Only one side overridden: the other keeps the shape default.
+    b = lm_batch(cfg, shape, 0, batch_override=4)
+    assert b["tokens"].shape == (4, 8)
+    b = lm_batch(cfg, shape, 0, seq_override=6)
+    assert b["tokens"].shape == (32, 6)
+
+
 def test_vision_dataset_learnable_and_deterministic():
     d1 = vision_dataset("t", 256, 64, 8, 1, 4)
     d2 = vision_dataset("t", 256, 64, 8, 1, 4)
