@@ -1,0 +1,176 @@
+"""End-to-end decode-step latency: fused decode chain vs per-op launches.
+
+Times one full serve_step (all layers) through ``make_serve_step`` with
+the persistent fused decode chain (kernels/decode_chain.py) engaged vs
+killed (``REPRO_DECODE_FUSED=0`` — the per-op oracle path), from the
+same post-prefill cache state.  The fused chain wins twice over: ~3
+persistent launches per layer instead of ~8, and its GEMMs run at the
+true decode row count where the per-op 2-D engine pads rows to a
+128-tile (so >90% of its gathers hit padding at decode batch sizes).
+
+Rows:
+  decode_chain_fused_step        informational: fused-chain step wall time
+  decode_chain_perop_step        informational: per-op step wall time
+  decode_chain_vs_per_op_speedup **gated**: fused/per-op wall-time ratio
+                                 (lower is better; both sides run on the
+                                 same box so runner speed cancels).  The
+                                 norm clamps below at 0.25 so an
+                                 unusually fast fused run can never
+                                 mis-seed the committed baseline; the
+                                 conservative baseline seed + 15% CI
+                                 drift gate enforce that the fused chain
+                                 keeps beating the per-op step on every
+                                 PR.
+
+The bench asserts the chain actually engaged (kernel trace counter) and
+that the kill-switch side did not — a dispatch regression fails the
+bench outright rather than silently gating a per-op-vs-per-op ratio.
+
+``--autotune`` sweeps the ``decode_chain`` autotune namespace
+(streaming-block / overlap candidates) over production config shapes
+from ``configs/`` and caches the winners (REPRO_AUTOTUNE_CACHE);
+``--reduced`` shrinks the shapes for CPU-interpret runs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_arch, reduced
+from repro.core.policy import NumericsPolicy
+from repro.kernels import decode_chain
+from repro.models.transformer import init_lm, init_lm_caches
+from repro.serve.engine import make_prefill, make_serve_step
+
+_B = 2
+_PLEN = 8
+_MAX_LEN = 32
+_CLAMP = 0.25  # norm floor: a fast fused run can't mis-seed the baseline
+
+
+def _timed_steps(step, params, nxt0, caches0, n_steps: int) -> float:
+    """Best-of wall time for ``n_steps`` sequential decode steps from the
+    given post-prefill state (steady-state: caller warmed the jit)."""
+    def run():
+        nxt, caches = nxt0, caches0
+        for _ in range(n_steps):
+            logits, nxt, caches = step(params, nxt, caches)
+        jax.block_until_ready(logits)
+    run()  # warm (trace + compile)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return best / n_steps
+
+
+def main(smoke: bool = False) -> None:
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    pol = NumericsPolicy(mode="amsim", multiplier="exact7")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (_B, _PLEN), 1,
+                              cfg.vocab)
+    caches = init_lm_caches(cfg, _B, _MAX_LEN)
+    # Prefill runs S=8 blocks — the chain never engages there, so one
+    # shared prefill feeds both sides the identical cache state.
+    nxt0, caches0 = jax.jit(make_prefill(cfg, pol, _MAX_LEN))(
+        params, toks, caches)
+    n_steps = 4 if smoke else 8
+
+    prev = os.environ.get("REPRO_DECODE_FUSED")
+    try:
+        os.environ["REPRO_DECODE_FUSED"] = "1"
+        step_fused = jax.jit(make_serve_step(cfg, pol))
+        t0 = decode_chain.trace_count()
+        t_fused = _timed_steps(step_fused, params, nxt0, caches0, n_steps)
+        assert decode_chain.trace_count() > t0, \
+            "fused decode chain did not engage — dispatch regression"
+
+        os.environ["REPRO_DECODE_FUSED"] = "0"
+        step_perop = jax.jit(make_serve_step(cfg, pol))
+        t1 = decode_chain.trace_count()
+        t_perop = _timed_steps(step_perop, params, nxt0, caches0, n_steps)
+        assert decode_chain.trace_count() == t1, \
+            "kill switch REPRO_DECODE_FUSED=0 did not disable the chain"
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_DECODE_FUSED", None)
+        else:
+            os.environ["REPRO_DECODE_FUSED"] = prev
+
+    emit("decode_chain_fused_step", t_fused,
+         f"{t_fused * 1e3:.2f}ms_per_step")
+    emit("decode_chain_perop_step", t_perop,
+         f"{t_perop * 1e3:.2f}ms_per_step")
+    ratio = t_fused / t_perop
+    emit("decode_chain_vs_per_op_speedup", 0.0,
+         f"{1 / ratio:.2f}x_fused_over_per_op",
+         norm=max(ratio, _CLAMP), gate=True)
+
+
+def autotune_main(archs: list[str], reduced_shapes: bool) -> None:
+    from repro.core.lutgen import get_lut, get_packed_lut
+    from repro.core.multipliers import get_multiplier
+    from repro.kernels import autotune
+
+    mult = get_multiplier("exact7")
+    lut = get_packed_lut(mult) or get_lut(mult)
+    for name in archs:
+        cfg = get_arch(name)
+        if reduced_shapes:
+            cfg = reduced(cfg)
+        if cfg.family not in ("dense", "moe") or cfg.act != "swiglu":
+            print(f"# {name}: family {cfg.family!r}/act {cfg.act!r} "
+                  f"not decode-chain shaped, skipping")
+            continue
+        d, K, F = cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.d_ff
+        rows = _B
+        ks = jax.random.split(jax.random.PRNGKey(0), 12)
+        s = 0.05
+        x = jax.random.normal(ks[0], (rows, d), jnp.float32)
+        attn = jax.random.normal(ks[1], (rows, K), jnp.float32)
+        g1 = jnp.ones((d,), jnp.float32)
+        g2 = jnp.ones((d,), jnp.float32)
+        wq = jax.random.normal(ks[2], (d, K)) * s
+        wk = jax.random.normal(ks[3], (d, cfg.n_kv_heads * cfg.head_dim)) * s
+        wv = jax.random.normal(ks[4], (d, cfg.n_kv_heads * cfg.head_dim)) * s
+        wo = jax.random.normal(ks[5], (K, d)) * s
+        wg = jax.random.normal(ks[6], (d, F)) * s
+        wu = jax.random.normal(ks[7], (d, F)) * s
+        wd = jax.random.normal(ks[8], (F, d)) * s
+        best = autotune.autotune_decode_chain(
+            x, attn, g1, g2, wq, wk, wv, wo, wg, wu, wd, lut,
+            mult.mantissa_bits, eps=cfg.norm_eps, mult=mult.name)
+        print(f"# {name}: r{rows}_d{d}_k{K}_f{F} -> {best}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer decode steps (CI bench gate)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep the decode_chain autotune namespace over "
+                         "config shapes instead of benchmarking")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch name(s) for --autotune "
+                         "(default: granite-3-2b)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use reduced() shapes in --autotune "
+                         "(CPU-interpret scale)")
+    args = ap.parse_args()
+    if args.autotune:
+        autotune_main(args.arch or ["granite-3-2b"], args.reduced)
+    else:
+        main(smoke=args.smoke)

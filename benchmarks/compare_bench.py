@@ -2,7 +2,13 @@
 
 Usage:
     python benchmarks/compare_bench.py BENCH_baseline.json BENCH_pr.json \
-        [--threshold 0.15]
+        [--threshold 0.15] [--markdown PATH] [--diff-json PATH]
+
+``--markdown`` appends a GitHub-flavoured ratio table (gated rows
+flagged) to PATH — CI passes ``$GITHUB_STEP_SUMMARY`` so every bench
+lane's verdict renders on the run page.  ``--diff-json`` writes the same
+comparison machine-readably (``BENCH_diff.json``, uploaded with the
+bench artifacts) for tooling that trends ratios across runs.
 
 For every metric present in both files the script computes a slowdown
 ratio (pr / baseline) and fails (exit 1) if a **gated** metric exceeds
@@ -51,12 +57,81 @@ def compare(base: dict, pr: dict, threshold: float):
             yield name, "us", ratio, gated, ratio <= 1 + threshold
 
 
+def _verdict(gated: bool, ok: bool) -> str:
+    if gated and not ok:
+        return "REGRESSION"
+    if not ok:
+        return "slower (info-only)"
+    return "ok" if gated else "ok (info-only)"
+
+
+def write_markdown(path: str, rows, only_base, only_pr, threshold: float,
+                   failures: int, gated_n: int) -> None:
+    """Append the comparison as a GitHub-flavoured markdown table —
+    append, not overwrite, so parallel lanes sharing one
+    $GITHUB_STEP_SUMMARY (or re-runs of one lane) stack their tables."""
+    lines = ["", "### Bench comparison (pr / baseline, "
+                 f"threshold {threshold:.0%})", ""]
+    if rows:
+        lines += ["| metric | kind | pr/base | gated | verdict |",
+                  "| --- | --- | ---: | :-: | --- |"]
+        for name, kind, ratio, gated, ok in rows:
+            flag = "**gated**" if gated else ""
+            verdict = _verdict(gated, ok)
+            if verdict == "REGRESSION":
+                verdict = "**REGRESSION**"
+            lines.append(f"| `{name}` | {kind} | {ratio:.3f} | {flag} "
+                         f"| {verdict} |")
+    for name in only_base:
+        lines.append(f"| `{name}` | - | - |  | baseline-only (skipped) |")
+    for name in only_pr:
+        lines.append(f"| `{name}` | - | - |  | pr-only (skipped) |")
+    if not gated_n:
+        lines += ["", "**no comparable gated metrics — gate vacuous, "
+                      "FAILING**"]
+    elif failures:
+        lines += ["", f"**{failures} gated metric(s) regressed beyond "
+                      f"{threshold:.0%}**"]
+    else:
+        lines += ["", f"all {gated_n} gated metrics within "
+                      f"{threshold:.0%} ({len(rows)} compared)"]
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def write_diff_json(path: str, rows, only_base, only_pr, threshold: float,
+                    failures: int, gated_n: int) -> None:
+    diff = {
+        "schema": 1,
+        "threshold": threshold,
+        "rows": [
+            {"name": name, "kind": kind, "ratio": round(ratio, 4),
+             "gated": gated, "ok": ok}
+            for name, kind, ratio, gated, ok in rows
+        ],
+        "only_base": list(only_base),
+        "only_pr": list(only_pr),
+        "gated_compared": gated_n,
+        "failures": failures,
+        "vacuous": not gated_n,
+    }
+    with open(path, "w") as f:
+        json.dump(diff, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
     ap.add_argument("pr")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="max tolerated slowdown fraction (default 0.15)")
+    ap.add_argument("--markdown", metavar="PATH", default=None,
+                    help="append a markdown ratio table to PATH "
+                         "(CI: $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--diff-json", metavar="PATH", default=None,
+                    help="write the comparison machine-readably "
+                         "(BENCH_diff.json, uploaded with artifacts)")
     args = ap.parse_args()
 
     base = load(args.baseline)
@@ -70,18 +145,19 @@ def main() -> int:
     gated_n = 0
     for name, kind, ratio, gated, ok in rows:
         gated_n += gated
-        if gated and not ok:
-            failures += 1
-            verdict = "REGRESSION"
-        elif not ok:
-            verdict = "slower (info-only)"
-        else:
-            verdict = "ok" if gated else "ok (info-only)"
-        print(f"{name:52s} {kind:5s} {ratio:8.3f}  {verdict}")
+        failures += gated and not ok
+        print(f"{name:52s} {kind:5s} {ratio:8.3f}  {_verdict(gated, ok)}")
     for name in only_base:
         print(f"{name:52s} {'-':5s} {'-':>8s}  baseline-only (skipped)")
     for name in only_pr:
         print(f"{name:52s} {'-':5s} {'-':>8s}  pr-only (skipped)")
+
+    if args.markdown:
+        write_markdown(args.markdown, rows, only_base, only_pr,
+                       args.threshold, failures, gated_n)
+    if args.diff_json:
+        write_diff_json(args.diff_json, rows, only_base, only_pr,
+                        args.threshold, failures, gated_n)
 
     if not gated_n:
         print("no comparable gated metrics between the two runs — gate "

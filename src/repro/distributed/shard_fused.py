@@ -255,13 +255,94 @@ def _row_specs(mesh, xdim, bentry):
     return sx, P("model", None), so
 
 
+def _overlap_setting(n: int):
+    """Parse REPRO_OVERLAP_PSUM (docs/configuration.md, runbook in
+    docs/distributed.md): how the row-parallel forward psum is pipelined
+    so layer *l*'s reduce overlaps the next block's compute.
+
+      * ``auto`` (default) — chunk the psum 4 ways when the output width
+        allows it (n >= 512 and divisible), else the single psum.
+      * integer N — chunk N ways (falls back to 1 when N doesn't divide
+        n; the ``decode_chain`` autotune namespace's ``overlap`` knob is
+        applied by exporting its winner here).
+      * ``ring`` — ppermute-pipelined reduce-scatter + all-gather.
+
+    Chunked mode splits w's OUTPUT columns, so every output element's
+    model-axis sum is computed exactly as before — bit-identical to the
+    single psum as long as both column widths resolve to the same GEMM
+    fold (always true under the default/hermetic autotune cache; a
+    tuned cache that splits the n buckets may reassociate).  Ring mode
+    reassociates the cross-device sum by construction (allclose only).
+    """
+    raw = os.environ.get("REPRO_OVERLAP_PSUM", "auto").strip().lower()
+    if raw == "ring":
+        return "ring"
+    if raw in ("", "auto"):
+        return 4 if n >= 512 and n % 4 == 0 else 1
+    try:
+        c = int(raw)
+    except ValueError:
+        return 1
+    return c if c > 1 and n % c == 0 else 1
+
+
+def _ring_psum(part, D: int, axis_name: str = "model"):
+    """ppermute-pipelined all-reduce of ``part`` (..., m, n) over the
+    mesh axis: reduce-scatter (D-1 steps) then all-gather (D-1 steps)
+    on n-chunks, so at every step all devices stream one chunk over the
+    ring while the next chunk's add is free to overlap.  Reassociates
+    the FP32 sum (allclose-level vs psum, not bitwise) — opt-in via
+    REPRO_OVERLAP_PSUM=ring."""
+    n = part.shape[-1]
+    if D <= 1 or n % D:
+        return jax.lax.psum(part, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    stack = jnp.stack(jnp.split(part, D, axis=-1))       # (D, ..., n/D)
+    # reduce-scatter: device d starts on chunk (d+1)%D, receives from
+    # d+1 each step and adds its local chunk (d+1+s)%D — after D-1
+    # steps device d owns fully-reduced chunk d.
+    back = [(i, (i - 1) % D) for i in range(D)]
+    acc = jax.lax.dynamic_index_in_dim(stack, (idx + 1) % D, 0,
+                                       keepdims=False)
+    for s in range(1, D):
+        acc = jax.lax.ppermute(acc, axis_name, back)
+        acc = acc + jax.lax.dynamic_index_in_dim(stack, (idx + 1 + s) % D,
+                                                 0, keepdims=False)
+    # all-gather: pass the newest reduced chunk forward; device d
+    # receives chunk (d-s)%D at step s.
+    fwd = [(i, (i + 1) % D) for i in range(D)]
+    out = jnp.zeros_like(stack)
+    out = jax.lax.dynamic_update_index_in_dim(out, acc, idx, 0)
+    buf = acc
+    for s in range(1, D):
+        buf = jax.lax.ppermute(buf, axis_name, fwd)
+        out = jax.lax.dynamic_update_index_in_dim(out, buf, (idx - s) % D, 0)
+    return jnp.concatenate([out[i] for i in range(D)], axis=-1)
+
+
 def _row_fwd(x, w, policy, mesh, site=None):
     leaf = policy.resolve(site)
     bentry = _batch_entry(mesh, x.shape[0]) if x.ndim > 2 else None
     sx, sw, so = _row_specs(mesh, x.ndim, bentry)
+    overlap = _overlap_setting(w.shape[-1])
 
     def body(xs, ws):
-        return jax.lax.psum(_matmul_nograd(xs, ws, leaf), "model")
+        if overlap == "ring":
+            return _ring_psum(_matmul_nograd(xs, ws, leaf), _msize(mesh))
+        if overlap == 1:
+            return jax.lax.psum(_matmul_nograd(xs, ws, leaf), "model")
+        # Chunked psum: GEMM chunk i's reduce is issued as soon as its
+        # columns finish, so XLA's async collectives overlap chunk i's
+        # wire time with chunk i+1's compute (and, across layers, the
+        # tail chunks with the next block's kernels).
+        step = ws.shape[-1] // overlap
+        outs = [
+            jax.lax.psum(
+                _matmul_nograd(xs, ws[..., i * step:(i + 1) * step], leaf),
+                "model")
+            for i in range(overlap)
+        ]
+        return jnp.concatenate(outs, axis=-1)
 
     out = shard_map(body, mesh=mesh, in_specs=(sx, sw), out_specs=so,
                     check_rep=False)(x, w)

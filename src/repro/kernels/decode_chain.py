@@ -1,0 +1,379 @@
+"""Persistent fused decode-chain kernels: whole-layer Pallas launches.
+
+The per-op engines pay one ``pallas_call`` per projection per layer per
+decode step, and each launch re-stages the LUT and pads the handful of
+decode rows out to a 128-row GEMM tile.  This module fuses the dense
+block's per-layer chain
+
+    rmsnorm(n1) -> wq|wk|wv          (launch 1, ``fused_qkv_norm``)
+    attention                         (launch 2, kernels/approx_attention)
+    wo -> +residual -> rmsnorm(n2)
+       -> silu(wg)*wu -> wd -> +res   (launch 3, ``fused_out_mlp``)
+
+into two additional persistent launches (three total per layer instead
+of ~8) that keep the packed LUT and every intermediate resident in VMEM:
+
+  * **weight streaming**: weights never sit in VMEM whole.  Each kernel
+    walks an "arbitrary" (sequential) grid axis whose block index maps
+    stream one (k, bn)/(bk, n) weight block per step from HBM — Pallas's
+    automatic grid pipelining double-buffers the next block's HBM->VMEM
+    copy under the current block's VPU gathers (the emit_pipeline
+    pattern), and clamped index maps pin the small operands (x, norm
+    scales, LUT) so they are copied exactly once per launch.
+  * **row economy**: the unfused 2-D engine pads m up to a 128-row tile;
+    a decode step has B*1 rows, so >90% of its gathers hit padding.
+    These kernels keep the true row count end to end.
+
+Bit-exactness contract (the unfused chain is the oracle,
+tests/test_decode_chain.py): every sub-GEMM derives its (bk, chunk)
+from the SAME autotune bucket the unfused engine would consult and pads
+its contraction dim to the same multiple of bk, so the FP32
+accumulation is the identical left fold over identical chunk bricks —
+fusion boundaries and output-column streaming never regroup a sum.  The
+q/k/v projections share the q bucket's fold (their buckets can differ
+only under a tuned cache that splits them; the hermetic/default cache
+keeps them equal, which is what the bit tests pin).  The in-kernel
+rmsnorm/silu/residual ops are the models/layers expressions verbatim,
+executed on the same backend.
+
+Dispatch lives in kernels/ops.py (``decode_chain_enabled``, kill switch
+``REPRO_DECODE_FUSED=0``); models/transformer.py routes single-token
+dense decode blocks here.  Streaming block sizes come from the
+``decode_chain`` autotune namespace (kernels/autotune.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import autotune
+from repro.kernels.common import (_ceil128, _ceil_to, _CompilerParams,
+                                  _gather_gemm_tile, best_chunk)
+
+# Incremented once per *trace* of each fused-chain wrapper (never per
+# step): tests assert engagement and the zero-retrace contract with it.
+_TRACES = [0]
+
+
+def trace_count() -> int:
+    return _TRACES[0]
+
+
+# VMEM budget for the resident working set (scratches + streamed blocks,
+# double-buffered).  Conservative vs the ~16 MiB/core hardware budget —
+# same philosophy as attention_fused_supported.
+_VMEM_BUDGET = 10 * 2 ** 20
+_MAX_ROWS = 512  # decode rows (B*S); beyond this the padded per-op
+                 # engines are no longer wasteful and fusion buys little
+
+
+def oracle_fold(rows: int, k: int, n: int, M: int, mult: str | None):
+    """(bk, chunk, k_padded) of the fold the unfused 2-D engine would
+    run for an (rows, k) @ (k, n) GEMM — the same autotune lookup +
+    clamp + chunk snap as approx_gemm._resolve, so the fused kernels
+    accumulate over the identical chunk-brick sequence."""
+    cfg = autotune.get_block_config("gemm2d", rows, k, n, M, mult=mult)
+    bk = min(cfg.bk, _ceil128(k))
+    chunk = best_chunk(cfg.chunk, bk)
+    return bk, chunk, _ceil_to(k, bk)
+
+
+def _snap_stream(want: int, total: int, chunk: int) -> int:
+    """Largest divisor of ``total`` that is a multiple of ``chunk`` and
+    <= max(want, chunk) — the weight-streaming block size.  ``total`` is
+    an oracle-padded contraction extent (a multiple of bk, itself a
+    multiple of chunk), so ``total`` is always a valid fallback."""
+    best = total
+    for cand in range(chunk, total + 1, chunk):
+        if total % cand == 0 and cand <= max(want, chunk):
+            best = cand
+    return best
+
+
+def _snap_cols(want: int, n: int) -> tuple[int, int]:
+    """(bn, padded_n) for output-column streaming: column splits never
+    touch the accumulation fold, so bn only needs to tile the padded
+    width."""
+    bn = max(8, min(want, _ceil128(n)))
+    return bn, _ceil_to(n, bn)
+
+
+def _rmsnorm_expr(x, g, eps: float):
+    # models/layers.rmsnorm verbatim (bit-for-bit, same backend).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)) * g
+
+
+# =====================================================================
+# Launch 1: rmsnorm(n1) -> q|k|v projections
+# =====================================================================
+
+def _qkv_kernel(x_ref, g_ref, wq_ref, wk_ref, wv_ref, lut_ref,
+                oq_ref, ok_ref, ov_ref, h_scr, *,
+                M: int, eps: float, chunk: int, nq: int, nk: int, nv: int,
+                dp: int, packed: bool):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _norm():
+        h = _rmsnorm_expr(x_ref[...], g_ref[...], eps)
+        # Zero-pad to the oracle's padded contraction extent: the pad
+        # chunks contribute the same exact +0.0 terms, in the same fold
+        # positions, as the unfused engine's _pad_to.
+        h_scr[...] = jnp.pad(h, ((0, 0), (0, dp - h.shape[1])))
+
+    h = h_scr[...]
+    rows = h.shape[0]
+
+    def proj(w_ref, o_ref):
+        o_ref[...] = _gather_gemm_tile(
+            h, w_ref[...], lut_ref[...],
+            jnp.zeros((rows, w_ref.shape[1]), jnp.float32),
+            M=M, chunk=chunk, packed=packed)
+
+    @pl.when(j < nq)
+    def _q():
+        proj(wq_ref, oq_ref)
+
+    @pl.when((j >= nq) & (j < nq + nk))
+    def _k():
+        proj(wk_ref, ok_ref)
+
+    @pl.when(j >= nq + nk)
+    def _v():
+        proj(wv_ref, ov_ref)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "M", "eps", "bn", "chunk", "dp", "interpret"))
+def _fused_qkv_impl(x, g1, wq, wk, wv, lut, M, *, eps, bn, chunk, dp,
+                    interpret):
+    rows, d = x.shape
+    nq, nk, nv = (w.shape[1] // bn for w in (wq, wk, wv))
+    packed = lut.dtype == jnp.uint16
+    cq = lambda j: jnp.clip(j, 0, nq - 1)
+    ck = lambda j: jnp.clip(j - nq, 0, nk - 1)
+    cv = lambda j: jnp.clip(j - nq - nk, 0, nv - 1)
+    outs = pl.pallas_call(
+        functools.partial(_qkv_kernel, M=M, eps=eps, chunk=chunk,
+                          nq=nq, nk=nk, nv=nv, dp=dp, packed=packed),
+        grid=(nq + nk + nv,),
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda j: (0, 0)),
+            pl.BlockSpec((d,), lambda j: (0,)),
+            # Streamed column blocks: the clamped maps revisit their last
+            # block outside their phase, which Pallas serves from the
+            # already-resident copy (no re-fetch).
+            pl.BlockSpec((dp, bn), lambda j: (0, cq(j))),
+            pl.BlockSpec((dp, bn), lambda j: (0, ck(j))),
+            pl.BlockSpec((dp, bn), lambda j: (0, cv(j))),
+            pl.BlockSpec((lut.shape[0],), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, bn), lambda j: (0, cq(j))),
+            pl.BlockSpec((rows, bn), lambda j: (0, ck(j))),
+            pl.BlockSpec((rows, bn), lambda j: (0, cv(j))),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((rows, w.shape[1]), jnp.float32)
+                   for w in (wq, wk, wv)],
+        scratch_shapes=[pltpu.VMEM((rows, dp), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x, g1, wq, wk, wv, lut)
+    return outs
+
+
+def fused_qkv_norm(x, g1, wq, wk, wv, lut, M: int, *, eps: float,
+                   bn: int | None = None, interpret: bool | None = None,
+                   mult: str | None = None):
+    """rmsnorm(x; g1) then three column-streamed LUT projections in ONE
+    launch.  x (rows, d); wq/wk/wv (d, N*); returns (q, k, v) f32.
+
+    The normed activation, accumulators and LUT stay VMEM-resident for
+    the whole launch; only weight column blocks stream from HBM.
+    """
+    rows, d = x.shape
+    _TRACES[0] += 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if bn is None:
+        bn = autotune.get_decode_chain_config(
+            rows, d, wq.shape[1], 0, M, mult=mult).bn
+    # One fold (the q bucket's) shared by all three projections — see
+    # module docstring for the shared-bucket caveat.
+    _, chunk, dp = oracle_fold(rows, d, wq.shape[1], M, mult)
+    x = x.astype(jnp.float32)
+    # A single bn must tile every projection: snap to the smallest.
+    bn = min(_snap_cols(bn, w.shape[1])[0] for w in (wq, wk, wv))
+    wp = [jnp.pad(w.astype(jnp.float32),
+                  ((0, dp - d), (0, _ceil_to(w.shape[1], bn) - w.shape[1])))
+          for w in (wq, wk, wv)]
+    q, k, v = _fused_qkv_impl(x, g1.astype(jnp.float32), *wp,
+                              jnp.asarray(lut), M, eps=float(eps), bn=bn,
+                              chunk=chunk, dp=dp, interpret=interpret)
+    return q[:, :wq.shape[1]], k[:, :wk.shape[1]], v[:, :wv.shape[1]]
+
+
+# =====================================================================
+# Launch 3: wo -> +residual -> rmsnorm(n2) -> silu(wg)*wu -> wd -> +res
+# =====================================================================
+
+def _out_mlp_kernel(xres_ref, attn_ref, g_ref, wo_ref, wg_ref, wu_ref,
+                    wd_ref, lut_ref, o_ref, y_scr, x1_scr, h_scr, acc_scr,
+                    *, M: int, eps: float, n_wo: int, n_ff: int,
+                    chunk_o: int, chunk_g: int, chunk_d: int,
+                    d: int, dp2: int, packed: bool):
+    t = pl.program_id(0)
+    rows = xres_ref.shape[0]
+    lut = lut_ref[...]
+
+    @pl.when(t == 0)
+    def _init():
+        y_scr[...] = jnp.zeros_like(y_scr)
+
+    # -- phase A: stream wo k-blocks, accumulate y = attn @ wo ----------
+    @pl.when(t < n_wo)
+    def _wo():
+        y_scr[...] = _gather_gemm_tile(
+            attn_ref[...], wo_ref[...], lut, y_scr[...],
+            M=M, chunk=chunk_o, packed=packed)
+
+    # -- phase boundary: residual + rmsnorm(n2), all in VMEM ------------
+    @pl.when(t == n_wo - 1)
+    def _norm():
+        x1 = xres_ref[...] + y_scr[...]
+        x1_scr[...] = x1
+        h = _rmsnorm_expr(x1, g_ref[...], eps)
+        h_scr[...] = jnp.pad(h, ((0, 0), (0, dp2 - d)))
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # -- phase B: stream wg/wu/wd d_ff-blocks, accumulate the FFN -------
+    @pl.when(t >= n_wo)
+    def _ffn():
+        h = h_scr[...]
+        bf = wg_ref.shape[1]
+        zero = jnp.zeros((rows, bf), jnp.float32)
+        g = _gather_gemm_tile(h, wg_ref[...], lut, zero,
+                              M=M, chunk=chunk_g, packed=packed)
+        u = _gather_gemm_tile(h, wu_ref[...], lut, zero,
+                              M=M, chunk=chunk_g, packed=packed)
+        a = jax.nn.silu(g) * u
+        acc_scr[...] = _gather_gemm_tile(
+            a, wd_ref[...], lut, acc_scr[...],
+            M=M, chunk=chunk_d, packed=packed)
+
+    @pl.when(t == n_wo + n_ff - 1)
+    def _flush():
+        o_ref[...] = x1_scr[...] + acc_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "M", "eps", "bko", "bf", "chunk_o", "chunk_g", "chunk_d", "dp2",
+    "interpret"))
+def _fused_out_mlp_impl(xres, attn, g2, wo, wg, wu, wd, lut, M, *, eps,
+                        bko, bf, chunk_o, chunk_g, chunk_d, dp2, interpret):
+    rows, d = xres.shape
+    kp = attn.shape[1]
+    n_wo = kp // bko
+    n_ff = wg.shape[1] // bf
+    packed = lut.dtype == jnp.uint16
+    co = lambda t: jnp.clip(t, 0, n_wo - 1)
+    cf = lambda t: jnp.clip(t - n_wo, 0, n_ff - 1)
+    out = pl.pallas_call(
+        functools.partial(_out_mlp_kernel, M=M, eps=eps, n_wo=n_wo,
+                          n_ff=n_ff, chunk_o=chunk_o, chunk_g=chunk_g,
+                          chunk_d=chunk_d, d=d, dp2=dp2, packed=packed),
+        grid=(n_wo + n_ff,),
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda t: (0, 0)),
+            pl.BlockSpec((rows, bko), lambda t: (0, co(t))),
+            pl.BlockSpec((d,), lambda t: (0,)),
+            pl.BlockSpec((bko, d), lambda t: (co(t), 0)),
+            pl.BlockSpec((dp2, bf), lambda t: (0, cf(t))),
+            pl.BlockSpec((dp2, bf), lambda t: (0, cf(t))),
+            pl.BlockSpec((bf, d), lambda t: (cf(t), 0)),
+            pl.BlockSpec((lut.shape[0],), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, d), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows, d), jnp.float32),
+                        pltpu.VMEM((rows, d), jnp.float32),
+                        pltpu.VMEM((rows, dp2), jnp.float32),
+                        pltpu.VMEM((rows, d), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(xres, attn, g2, wo, wg, wu, wd, lut)
+    return out
+
+
+def fused_out_mlp(xres, attn, g2, wo, wg, wu, wd, lut, M: int, *,
+                  eps: float, bko: int | None = None, bf: int | None = None,
+                  interpret: bool | None = None, mult: str | None = None):
+    """The back half of a dense decode block in ONE launch:
+
+        x1 = xres + attn @ wo;  h = rmsnorm(x1; g2)
+        out = x1 + (silu(h @ wg) * (h @ wu)) @ wd
+
+    xres (rows, d) residual stream, attn (rows, H*dh) attention output.
+    x1/h and both accumulators live in VMEM for the whole launch; wo
+    streams over its k blocks, wg/wu/wd over d_ff blocks.
+    """
+    rows, d = xres.shape
+    K = attn.shape[1]
+    F = wg.shape[1]
+    _TRACES[0] += 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    dc = autotune.get_decode_chain_config(rows, d, K, F, M, mult=mult)
+    bko = dc.bko if bko is None else bko
+    bf = dc.bf if bf is None else bf
+    # Oracle folds (unfused engine buckets): wo (k=K,n=d), gate/up
+    # (k=d,n=F), down (k=F,n=d).
+    bk_o, chunk_o, kp = oracle_fold(rows, K, d, M, mult)
+    bk_g, chunk_g, dp2 = oracle_fold(rows, d, F, M, mult)
+    bk_d, chunk_d, fp = oracle_fold(rows, F, d, M, mult)
+    bko = _snap_stream(bko, kp, chunk_o)
+    # bf splits wg/wu's OUTPUT dim but wd's contraction dim: only the wd
+    # fold constrains it, so snap to chunk_d multiples.
+    bf = _snap_stream(bf, fp, chunk_d)
+    f32 = jnp.float32
+    attn = jnp.pad(attn.astype(f32), ((0, 0), (0, kp - K)))
+    wo = jnp.pad(wo.astype(f32), ((0, kp - K), (0, 0)))
+    wg = jnp.pad(wg.astype(f32), ((0, dp2 - d), (0, fp - F)))
+    wu = jnp.pad(wu.astype(f32), ((0, dp2 - d), (0, fp - F)))
+    wd = jnp.pad(wd.astype(f32), ((0, fp - F), (0, 0)))
+    return _fused_out_mlp_impl(
+        xres.astype(f32), attn, g2.astype(f32), wo, wg, wu, wd,
+        jnp.asarray(lut), M, eps=float(eps), bko=bko, bf=bf,
+        chunk_o=chunk_o, chunk_g=chunk_g, chunk_d=chunk_d, dp2=dp2,
+        interpret=interpret)
+
+
+# =====================================================================
+# Guards
+# =====================================================================
+
+def decode_chain_supported(rows: int, d: int, k_attn: int, d_ff: int,
+                           M: int, mult: str | None = None) -> bool:
+    """Shape/VMEM guard for the two chain launches.  The resident set is
+    the normed activation + four (rows, d)-ish scratches + the LUT +
+    one double-buffered weight block per streamed operand."""
+    if rows < 1 or rows > _MAX_ROWS:
+        return False
+    _, _, dp = oracle_fold(rows, d, k_attn, M, mult)
+    bk_o, _, kp = oracle_fold(rows, k_attn, d, M, mult)
+    bk_d, _, fp = oracle_fold(rows, d_ff, d, M, mult)
+    _, _, dp2 = oracle_fold(rows, d, d_ff, M, mult)
+    dc = autotune.get_decode_chain_config(rows, d, k_attn, d_ff, M,
+                                          mult=mult)
+    lut_bytes = 4 * (1 << (2 * (M + 1)))  # canonical worst case
+    scratches = 4 * rows * (dp + dp2 + 3 * d)
+    blocks = 2 * 4 * (dp * dc.bn * 3            # qkv column blocks
+                      + bk_o * d + 2 * dp2 * dc.bf + dc.bf * d)
+    return scratches + blocks + lut_bytes <= _VMEM_BUDGET

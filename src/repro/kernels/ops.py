@@ -571,3 +571,153 @@ def _pattn_bwd(policy, causal, window, res, g):
 
 
 policy_attention.defvjp(_pattn_fwd, _pattn_bwd)
+
+
+# =====================================================================
+# Fused decode chain (whole-layer persistent kernels)
+#
+# kernels/decode_chain.py fuses a dense block's qkv-projection front
+# half and wo->rmsnorm->FFN back half into one persistent launch each
+# (LUT + activations VMEM-resident, weights streamed).  This section is
+# the dispatch seam, mirroring the conv/attention structure: a leaf
+# resolver, an enable guard (kill switch ``REPRO_DECODE_FUSED=0``), and
+# custom-VJP wrappers whose backward recomputes through the unfused
+# policy_matmul chain — the oracle the fused forward is bit-tested
+# against — so gradients are identical to the per-op lowering.
+# models/transformer.py routes single-token dense decode blocks here.
+# =====================================================================
+
+_CHAIN_SITES = ("qkv", "wo", "wg", "wu", "wd")
+
+
+def decode_chain_leaf(policy: Numerics) -> NumericsPolicy | None:
+    """The single forward leaf the chain kernels would run EVERY
+    projection under, or None when the policy resolves any two chain
+    sites differently (the kernels bake one LUT; a heterogeneous table
+    forces the per-op lowering)."""
+    leaves = [policy.resolve(s) for s in _CHAIN_SITES]
+    first = leaves[0]
+    for leaf in leaves[1:]:
+        if (leaf.mode, leaf.multiplier) != (first.mode, first.multiplier):
+            return None
+    return first
+
+
+def decode_chain_enabled(policy: Numerics, rows: int, d: int,
+                         k_attn: int, d_ff: int) -> bool:
+    """Dispatch guard for the fused decode chain: every chain site must
+    resolve to the same amsim leaf, killable via REPRO_DECODE_FUSED=0,
+    no active shard_fused mesh dispatch (the sharded per-op path owns
+    Megatron partitioning; under a mesh with REPRO_SHARD_FUSED=0 the
+    chain engages with GSPMD-replicated lowering), and the shape must
+    pass the kernel's VMEM bounds."""
+    leaf = decode_chain_leaf(policy)
+    if leaf is None or leaf.mode != "amsim" or leaf.is_native:
+        return False
+    if os.environ.get("REPRO_DECODE_FUSED", "1").lower() in ("0", "false"):
+        return False
+    from repro.distributed import shard_fused  # lazy: circular import
+    if shard_fused.active_mesh(leaf) is not None:
+        return False
+    from repro.kernels.decode_chain import decode_chain_supported
+    mult = get_multiplier(leaf.multiplier)
+    return decode_chain_supported(rows, d, k_attn, d_ff,
+                                  mult.mantissa_bits, mult=mult.name)
+
+
+def decode_qkv_oracle(x, g1, wq, wk, wv, policy: Numerics, eps: float):
+    """Unfused reference for the chain's front half: rmsnorm + three
+    per-op projections, exactly what models/layers runs when the chain
+    is off.  The fused forward is bit-tested against this, and the
+    fused VJP recomputes through it."""
+    from repro.kernels.decode_chain import _rmsnorm_expr
+    h = _rmsnorm_expr(x.astype(jnp.float32), g1, eps)
+    return (policy_matmul(h, wq, policy, "qkv"),
+            policy_matmul(h, wk, policy, "qkv"),
+            policy_matmul(h, wv, policy, "qkv"))
+
+
+def decode_out_mlp_oracle(x, attn, g2, wo, wg, wu, wd, policy: Numerics,
+                          eps: float):
+    """Unfused reference for the chain's back half: wo projection +
+    residual + rmsnorm + swiglu FFN + residual, per-op."""
+    from repro.kernels.decode_chain import _rmsnorm_expr
+    x1 = x.astype(jnp.float32) + policy_matmul(
+        attn.astype(jnp.float32), wo, policy, "wo")
+    h = _rmsnorm_expr(x1, g2, eps)
+    y = policy_matmul(
+        jax.nn.silu(policy_matmul(h, wg, policy, "wg"))
+        * policy_matmul(h, wu, policy, "wu"),
+        wd, policy, "wd")
+    return x1 + y
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def decode_qkv(x, g1, wq, wk, wv, policy: Numerics, eps: float):
+    """rmsnorm(x; g1) + q/k/v projections in one persistent launch.
+
+    x (rows, d); returns (q, k, v) f32.  Backward recomputes through
+    :func:`decode_qkv_oracle` (jax.vjp), so each backward GEMM runs
+    under the numerics the policy resolves for the qkv site's dx/dw
+    passes — bit-identical to the per-op lowering's gradients.  Callers
+    must have checked :func:`decode_chain_enabled`.
+    """
+    return _decode_qkv_fwd_impl(x, g1, wq, wk, wv, policy, eps)
+
+
+def _decode_qkv_fwd_impl(x, g1, wq, wk, wv, policy, eps):
+    from repro.kernels.decode_chain import fused_qkv_norm
+    mult = get_multiplier(decode_chain_leaf(policy).multiplier)
+    return fused_qkv_norm(x, g1, wq, wk, wv, _amsim_lut(mult),
+                          mult.mantissa_bits, eps=eps, mult=mult.name)
+
+
+def _decode_qkv_fwd(x, g1, wq, wk, wv, policy, eps):
+    out = _decode_qkv_fwd_impl(x, g1, wq, wk, wv, policy, eps)
+    return out, (x, g1, wq, wk, wv)
+
+
+def _decode_qkv_bwd(policy, eps, res, g):
+    x, g1, wq, wk, wv = res
+    _, vjp = jax.vjp(
+        lambda *args: decode_qkv_oracle(*args, policy, eps),
+        x, g1, wq, wk, wv)
+    return vjp(tuple(c.astype(jnp.float32) for c in g))
+
+
+decode_qkv.defvjp(_decode_qkv_fwd, _decode_qkv_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def decode_out_mlp(x, attn, g2, wo, wg, wu, wd, policy: Numerics,
+                   eps: float):
+    """wo projection + residual + rmsnorm + swiglu FFN + residual in one
+    persistent launch.  x (rows, d) residual stream, attn (rows, H*dh).
+    Backward recomputes through :func:`decode_out_mlp_oracle`.  Callers
+    must have checked :func:`decode_chain_enabled`.
+    """
+    return _decode_out_mlp_fwd_impl(x, attn, g2, wo, wg, wu, wd, policy,
+                                    eps)
+
+
+def _decode_out_mlp_fwd_impl(x, attn, g2, wo, wg, wu, wd, policy, eps):
+    from repro.kernels.decode_chain import fused_out_mlp
+    mult = get_multiplier(decode_chain_leaf(policy).multiplier)
+    return fused_out_mlp(x, attn, g2, wo, wg, wu, wd, _amsim_lut(mult),
+                         mult.mantissa_bits, eps=eps, mult=mult.name)
+
+
+def _decode_out_mlp_fwd(x, attn, g2, wo, wg, wu, wd, policy, eps):
+    out = _decode_out_mlp_fwd_impl(x, attn, g2, wo, wg, wu, wd, policy, eps)
+    return out, (x, attn, g2, wo, wg, wu, wd)
+
+
+def _decode_out_mlp_bwd(policy, eps, res, g):
+    x, attn, g2, wo, wg, wu, wd = res
+    _, vjp = jax.vjp(
+        lambda *args: decode_out_mlp_oracle(*args, policy, eps),
+        x, attn, g2, wo, wg, wu, wd)
+    return vjp(g.astype(jnp.float32))
+
+
+decode_out_mlp.defvjp(_decode_out_mlp_fwd, _decode_out_mlp_bwd)

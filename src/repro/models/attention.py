@@ -244,7 +244,7 @@ def _paged_cache_update(cache, k, v, q_pos):
 def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
               kv_src=None, causal=True, q_offset=0, cache=None,
               window: int = 0, q_chunk: int | None = None,
-              use_rope: bool = True):
+              use_rope: bool = True, qkv=None, project_out: bool = True):
     """Full attention block.  Returns (out, new_cache).
 
     kv_src: encoder states for cross-attention (no rope, no cache update
@@ -252,6 +252,15 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
     cache:  {"k","v": (B, Tmax, KV, dh), "len": int32} for decode (ring
             buffer), or a paged-cache dict carrying a ``ptab`` page
             table (``_paged_cache_update``; serve/paged_cache.py).
+    qkv:    optional pre-computed (q, k, v) projections, shaped
+            (B, S, H, dh) / (B, S, KV, dh), *before* rope — the fused
+            decode chain (kernels/decode_chain.py) computes them in its
+            persistent qkv launch and hands them in here so rope, cache
+            update and the score/value lowering stay shared.  Mutually
+            exclusive with ``kv_src``.
+    project_out: when False, return the pre-``wo`` context
+            (B, S, H*dh) — the fused decode chain folds the output
+            projection into its out-mlp launch.
     """
     B, S, d = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -260,14 +269,19 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
     # each runs the fused LUT kernel per shard (distributed/shard_fused).
     # Numerics sites: projections are "qkv"/"wo"; the score/value
     # contractions below resolve "attn_score"/"attn_value".
-    q = linear(p["wq"], x, policy, kind="column",
-               site="qkv").reshape(B, S, H, dh)
-    src = x if kv_src is None else kv_src
-    Tsrc = src.shape[1]
-    k = linear(p["wk"], src, policy, kind="column",
-               site="qkv").reshape(B, Tsrc, KV, dh)
-    v = linear(p["wv"], src, policy, kind="column",
-               site="qkv").reshape(B, Tsrc, KV, dh)
+    if qkv is not None:
+        assert kv_src is None, "qkv= is decoder self-attention only"
+        q, k, v = qkv
+        Tsrc = k.shape[1]
+    else:
+        q = linear(p["wq"], x, policy, kind="column",
+                   site="qkv").reshape(B, S, H, dh)
+        src = x if kv_src is None else kv_src
+        Tsrc = src.shape[1]
+        k = linear(p["wk"], src, policy, kind="column",
+                   site="qkv").reshape(B, Tsrc, KV, dh)
+        v = linear(p["wv"], src, policy, kind="column",
+                   site="qkv").reshape(B, Tsrc, KV, dh)
 
     paged = cache is not None and "ptab" in cache
     if paged:
@@ -381,8 +395,10 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
             out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
     else:
         out = attend(q, q_pos)
-    return linear(p["wo"], out.reshape(B, S, H * dh), policy,
-                  kind="row", site="wo"), cache
+    out = out.reshape(B, S, H * dh)
+    if not project_out:
+        return out, cache
+    return linear(p["wo"], out, policy, kind="row", site="wo"), cache
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int):

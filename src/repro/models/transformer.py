@@ -49,6 +49,8 @@ def _init_dense_layer(key, cfg: ArchConfig, use_moe: bool):
 
 
 def _dense_block(p, x, cfg, policy, cache, window):
+    if _use_fused_decode_chain(p, x, cfg, policy, cache):
+        return _dense_block_fused_decode(p, x, cfg, policy, cache, window)
     a, cache = attention(p["attn"], rmsnorm(p["n1"], x, cfg.norm_eps), cfg,
                          policy, cache=cache, window=window)
     x = x + a
@@ -58,6 +60,54 @@ def _dense_block(p, x, cfg, policy, cache, window):
     else:
         y, aux = ffn(p["ffn"], h, policy, cfg.act), 0.0
     return x + y, cache, aux
+
+
+def _use_fused_decode_chain(p, x, cfg, policy, cache) -> bool:
+    """Trace-time dispatch for the persistent fused decode chain
+    (kernels/decode_chain.py): single-token dense decode under a
+    homogeneous amsim policy, no sharded per-op mesh dispatch
+    (``ops.decode_chain_enabled``, kill switch REPRO_DECODE_FUSED=0).
+    Swiglu-only: the out-mlp launch bakes the gate/up/down structure.
+    """
+    B, S, d = x.shape
+    if cache is None or S != 1 or "ffn" not in p or cfg.act != "swiglu":
+        return False
+    if "b" in p["attn"]["wo"] or "b" in p["ffn"]["wd"]:
+        return False  # kernels fold no epilogue bias (qkv bias is fine:
+        #               it is added outside, in forward op order)
+    if cfg.shard_attn_heads and jax.device_count() > 1:
+        return False  # meshless multi-device einsum constraints path
+    from repro.kernels import ops
+    return ops.decode_chain_enabled(
+        policy, B * S, d, cfg.n_heads * cfg.head_dim, cfg.d_ff)
+
+
+def _dense_block_fused_decode(p, x, cfg, policy, cache, window):
+    """One decode step of a dense block in three persistent launches:
+    fused norm+qkv, attention (shared lowering), fused
+    wo+residual+norm+FFN+residual — bit-identical to ``_dense_block``
+    (the per-op path is the oracle; tests/test_decode_chain.py)."""
+    from repro.kernels import ops
+    B, S, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x2 = x.reshape(B * S, d)
+    at = p["attn"]
+    q2, k2, v2 = ops.decode_qkv(x2, p["n1"]["g"], at["wq"]["w"],
+                                at["wk"]["w"], at["wv"]["w"],
+                                policy, cfg.norm_eps)
+    if "b" in at["wq"]:
+        q2 = q2 + at["wq"]["b"]
+        k2 = k2 + at["wk"]["b"]
+        v2 = v2 + at["wv"]["b"]
+    qkv = (q2.reshape(B, S, H, dh), k2.reshape(B, S, KV, dh),
+           v2.reshape(B, S, KV, dh))
+    a2, cache = attention(at, x, cfg, policy, cache=cache, window=window,
+                          qkv=qkv, project_out=False)
+    y2 = ops.decode_out_mlp(x2, a2.reshape(B * S, H * dh), p["n2"]["g"],
+                            at["wo"]["w"], p["ffn"]["wg"]["w"],
+                            p["ffn"]["wu"]["w"], p["ffn"]["wd"]["w"],
+                            policy, cfg.norm_eps)
+    return y2.reshape(B, S, d), cache, jnp.zeros((), jnp.float32)
 
 
 def _ssm_block(p, x, cfg, policy, cache):
