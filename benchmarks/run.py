@@ -32,7 +32,7 @@ def _sections(smoke: bool):
     # Smoke (the CI gate) imports only the engine benches; an
     # import-time error in an unused full-run module must not brick it.
     from benchmarks import (bench_attention, bench_batched_gemm,
-                            bench_conv2d, bench_decode_chain,
+                            bench_conv2d, bench_decode_chain, bench_faults,
                             bench_policy_table, bench_serving)
 
     if smoke:
@@ -45,6 +45,8 @@ def _sections(smoke: bool):
              lambda: bench_attention.main(smoke=True), "kernels"),
             ("Policy-table overhead (smoke)",
              lambda: bench_policy_table.main(smoke=True), "kernels"),
+            ("Fault-injection seam overhead (smoke)",
+             lambda: bench_faults.main(smoke=True), "kernels"),
             ("Fused decode chain (smoke)",
              lambda: bench_decode_chain.main(smoke=True), "kernels"),
             ("Continuous-batching serving (smoke)",
@@ -66,6 +68,7 @@ def _sections(smoke: bool):
         ("Fused approx-conv2d engine", bench_conv2d.main, "kernels"),
         ("Fused approx-attention engine", bench_attention.main, "kernels"),
         ("Policy-table overhead", bench_policy_table.main, "kernels"),
+        ("Fault-injection seam overhead", bench_faults.main, "kernels"),
         ("Fused decode chain", bench_decode_chain.main, "kernels"),
         ("Continuous-batching serving", bench_serving.main, "serving"),
         ("Fig.10/Table III convergence & accuracy", bench_convergence.main,

@@ -1,1 +1,3 @@
-from repro.checkpoint.store import CheckpointManager, load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.store import (CheckpointCorruptError,  # noqa: F401
+                                    CheckpointManager, load_pytree,
+                                    save_pytree)

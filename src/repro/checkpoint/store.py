@@ -5,16 +5,30 @@ saved, so a restart may build a *different* mesh (elastic re-meshing
 after node loss) and reshard on restore — the elastic-scaling story of
 DESIGN.md §5.  Writes are atomic (tmp file + os.replace), so a crash
 mid-write never corrupts the latest checkpoint.
+
+Integrity (docs/robustness.md): every leaf is CRC32-tagged at save time
+(``__crc__`` inside the ``__meta__`` JSON) and verified on load, so a
+bit-rotted or truncated file surfaces as :class:`CheckpointCorruptError`
+instead of silently restoring garbage params.  ``restore_latest`` walks
+back to the next-oldest checkpoint on corruption — exactly the
+crash-recovery path — and only raises when *every* candidate is corrupt
+(silently restarting from step 0 would hide data loss).
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import zipfile
+import zlib
 from pathlib import Path
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file is unreadable or failed CRC verification."""
 
 
 def _flatten(tree):
@@ -27,35 +41,66 @@ def _flatten(tree):
     return out, treedef
 
 
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
 def save_pytree(path: str | os.PathLike, tree, extra: dict | None = None):
-    """Atomically save a pytree (params/opt state/...) to ``path``."""
+    """Atomically save a pytree (params/opt state/...) to ``path``.
+
+    Per-leaf CRC32s ride in the ``__meta__`` JSON under ``"__crc__"``;
+    ``load_pytree`` verifies them.
+    """
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat, _ = _flatten(tree)
-    if extra:
-        flat["__meta__"] = np.frombuffer(
-            json.dumps(extra).encode(), dtype=np.uint8)
+    meta = dict(extra or {})
+    meta["__crc__"] = {k: _leaf_crc(v) for k, v in flat.items()}
+    flat["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8)
     tmp = path.with_suffix(".tmp.npz")
     np.savez(tmp, **flat)
     os.replace(tmp, path)
 
 
-def load_pytree(path: str | os.PathLike, like, shardings=None):
+def load_pytree(path: str | os.PathLike, like, shardings=None, *,
+                verify: bool = True):
     """Load into the structure of ``like``; optionally device_put with
-    ``shardings`` (a matching tree of NamedSharding) for elastic re-mesh."""
-    with np.load(path) as z:
-        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-        leaves = []
-        for p, leaf in flat:
-            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                           for k in p)
-            arr = z[key]
-            leaves.append(arr)
-        tree = jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(like), leaves)
-        meta = None
-        if "__meta__" in z:
-            meta = json.loads(bytes(z["__meta__"]).decode())
+    ``shardings`` (a matching tree of NamedSharding) for elastic re-mesh.
+
+    With ``verify`` (the default) every leaf's CRC32 is checked against
+    the ``__crc__`` map saved in ``__meta__``; a mismatch — or any
+    read/decode failure (truncated zip, missing key, garbage bytes) —
+    raises :class:`CheckpointCorruptError`.  Checkpoints written before
+    CRC tagging (no ``__crc__``) load without verification.
+    """
+    try:
+        with np.load(path) as z:
+            flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+            meta = None
+            if "__meta__" in z:
+                meta = json.loads(bytes(z["__meta__"]).decode())
+            crcs = (meta or {}).pop("__crc__", None)
+            leaves = []
+            for p, leaf in flat:
+                key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                               for k in p)
+                arr = z[key]
+                if verify and crcs is not None:
+                    want = crcs.get(key)
+                    if want is None or _leaf_crc(arr) != want:
+                        raise CheckpointCorruptError(
+                            f"{path}: CRC mismatch on leaf {key!r}")
+                leaves.append(arr)
+            tree = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(like), leaves)
+    except CheckpointCorruptError:
+        raise
+    except (OSError, EOFError, KeyError, ValueError,
+            zipfile.BadZipFile, json.JSONDecodeError) as e:
+        # np.load raises zipfile.BadZipFile on truncation, KeyError on a
+        # missing leaf, ValueError on a garbled member.
+        raise CheckpointCorruptError(f"{path}: unreadable ({e!r})") from e
     if shardings is not None:
         tree = jax.tree.map(jax.device_put, tree, shardings)
     return tree, meta
@@ -64,10 +109,12 @@ def load_pytree(path: str | os.PathLike, like, shardings=None):
 class CheckpointManager:
     """step-NNNNNNNN.npz files under a directory; keep the newest K."""
 
-    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+    def __init__(self, directory: str | os.PathLike, keep: int = 3,
+                 log_fn=print):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self.log_fn = log_fn
 
     def _steps(self):
         steps = []
@@ -90,8 +137,22 @@ class CheckpointManager:
             self.path(s).unlink(missing_ok=True)
 
     def restore_latest(self, like, shardings=None):
-        step = self.latest_step()
-        if step is None:
+        """Restore the newest *intact* checkpoint, walking back past
+        corrupt/truncated files (warn-and-fall-back).  Returns
+        ``(None, None)`` when the directory holds no checkpoints at all;
+        raises :class:`CheckpointCorruptError` when checkpoints exist
+        but every one fails verification.
+        """
+        steps = self._steps()
+        if not steps:
             return None, None
-        tree, meta = load_pytree(self.path(step), like, shardings)
-        return tree, (meta or {"step": step})
+        for step in reversed(steps):
+            try:
+                tree, meta = load_pytree(self.path(step), like, shardings)
+            except CheckpointCorruptError as e:
+                self.log_fn(f"[checkpoint] {e}; falling back to the "
+                            f"previous checkpoint")
+                continue
+            return tree, (meta or {"step": step})
+        raise CheckpointCorruptError(
+            f"{self.dir}: all {len(steps)} checkpoints failed verification")

@@ -491,6 +491,44 @@ def table_from_assignments(spec: str, *, default: tuple[str, str] | None = None,
     return PolicyTable(tuple(rules))
 
 
+def demote_numerics(numerics: Numerics) -> Numerics | None:
+    """One rung down the degradation ladder (docs/robustness.md).
+
+    Every approximate leaf steps toward exactness: an approximate
+    multiplier demotes to ``exact7`` (same mode — still exercises the
+    LUT datapath, but with an exact mantissa product), and an already
+    ``exact7`` leaf demotes to ``native`` (off the approximate datapath
+    entirely, immune to LUT faults).  Native leaves are left alone.
+    Returns the demoted policy, or ``None`` when the input is already
+    fully native — the ladder's "no safer rung" signal, which makes it
+    directly usable as a ``TrainerConfig.degrade_fn`` building block.
+    """
+    def demote_leaf(mode: str, multiplier: str) -> tuple[str, str] | None:
+        leaf = NumericsPolicy(mode=mode, multiplier=multiplier)
+        if leaf.is_native:
+            return None
+        if multiplier != "exact7":
+            return mode, "exact7"
+        return "native", "fp32"
+
+    if isinstance(numerics, NumericsPolicy):
+        step = demote_leaf(numerics.mode, numerics.multiplier)
+        if step is None:
+            return None
+        return dataclasses.replace(numerics, mode=step[0], multiplier=step[1])
+
+    new_rules, changed = [], False
+    for r in numerics.rules:
+        step = demote_leaf(r.mode, r.multiplier)
+        if step is None:
+            new_rules.append(r)
+        else:
+            changed = True
+            new_rules.append(dataclasses.replace(
+                r, mode=step[0], multiplier=step[1]))
+    return PolicyTable(tuple(new_rules)) if changed else None
+
+
 def load_numerics(numerics: str, multiplier: str = "fp32", **kw) -> Numerics:
     """CLI helper: ``numerics`` is a mode name (flat policy with
     ``multiplier``) or a path to a policy-table JSON file.  Anything

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core.float_bits import jnp_truncate_mantissa, jnp_round_mantissa
 from repro.core.lutgen import get_lut, get_packed_lut
 from repro.core.multipliers import get_multiplier
@@ -70,9 +71,30 @@ from repro.kernels.ref import ref_amsim_gemm, ref_direct_gemm, ref_im2col
 def _amsim_lut(mult):
     """Kernel LUT for ``mult``: packed uint16 when the table allows it
     (all registered cores confine results to the top-M mantissa bits),
-    halving VMEM footprint; canonical uint32 otherwise."""
+    halving VMEM footprint; canonical uint32 otherwise.
+
+    This is the **fault-injection seam** (core/faults.py): when a fault
+    spec is active (REPRO_FAULTS or faults.inject), the table is
+    perturbed here — once, at trace time — so every kernel family that
+    closes over a LUT (GEMM, conv fwd/dw/dx, fused attention, decode
+    chain, and all their sharded forms) inherits the faults with zero
+    kernel edits.  Off (the default) returns the cached array object
+    untouched: bitwise-identical traces, zero copies.
+    """
     packed = get_packed_lut(mult)
-    return packed if packed is not None else get_lut(mult)
+    if packed is not None:
+        return faults.faulted_lut(packed, mult.mantissa_bits, packed=True,
+                                  mult=mult.name)
+    return faults.faulted_lut(get_lut(mult), mult.mantissa_bits,
+                              packed=False, mult=mult.name)
+
+
+def _oracle_lut(mult):
+    """Canonical uint32 LUT for the jnp oracle mode — same fault seam as
+    the kernels, so ``amsim_jnp`` reproduces injected faults bit-for-bit
+    (the packed/unpacked fault equivalence is pinned in tests)."""
+    return faults.faulted_lut(get_lut(mult), mult.mantissa_bits,
+                              packed=False, mult=mult.name)
 
 
 # One mode-routing table shared by the 2-D and batched engines (the two
@@ -84,7 +106,7 @@ _GEMM_MODES = {
     "amsim": lambda a, b, mult, kernel: kernel(
         a, b, _amsim_lut(mult), mult.mantissa_bits, mult=mult.name),
     "amsim_jnp": lambda a, b, mult, kernel: ref_amsim_gemm(
-        a, b, jnp.asarray(get_lut(mult)), mult.mantissa_bits),
+        a, b, jnp.asarray(_oracle_lut(mult)), mult.mantissa_bits),
     "direct": lambda a, b, mult, kernel: ref_direct_gemm(a, b, mult),
 }
 

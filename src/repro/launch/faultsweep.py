@@ -1,0 +1,291 @@
+"""Fault-injection campaign runner: the resilience curve as a one-command
+tool (docs/robustness.md).
+
+Sweeps a :class:`core.faults.FaultCampaign` — one seeded fault spec per
+point, typically a bit-flip-rate ladder — and trains each point with the
+production trainer under the divergence supervisor, reusing the PR 5
+sweep substrate (same seeded init, same deterministic batches, so curves
+differ only by the injected faults).  Emits a JSON report of accuracy /
+loss vs fault rate: how hard can the LUT hardware fault before training
+stops converging, and how often the supervisor had to intervene.
+
+Workloads: ``--arch`` accepts the paper's vision models
+(``lenet-300-100``, ``lenet-5``, ``resnet-mini`` — trained on the
+learnable synthetic dataset, reporting **test accuracy** per point, the
+paper-faithful Fig. 10 axis) or any LM arch from the main registry
+(reporting final loss).
+
+Trace discipline: a fault spec perturbs the LUT *constants* a trace
+closes over, so each campaign point builds a fresh ``jax.jit`` inside
+its ``faults.inject`` scope and asserts exactly one trace per ladder
+rung (the no-retrace contract of docs/policies.md, extended: demoting
+the policy mid-run retraces once per rung, never per step).
+
+Examples::
+
+  # LeNet bit-flip accuracy-degradation curve (the CI smoke lane)
+  PYTHONPATH=src python -m repro.launch.faultsweep --arch lenet-300-100 \
+      --steps 5 --rates 0,1e-3,1e-2,2e-1 --out FAULT_smoke.json
+
+  # stuck-at campaign on the reduced LM with the degradation ladder armed
+  PYTHONPATH=src python -m repro.launch.faultsweep --arch granite-3-2b \
+      --reduced --steps 20 --model stuck1 --rates 0,1e-3,3e-2 \
+      --ladder --spike-factor 10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.configs.paper_models import VISION_REGISTRY
+from repro.core import faults
+from repro.core.faults import FaultCampaign
+from repro.core.policy import NumericsPolicy, demote_numerics
+from repro.data.pipeline import lm_batch, vision_batches, vision_dataset
+from repro.models.transformer import init_lm, lm_loss
+from repro.models.vision import init_vision, vision_forward, vision_loss
+from repro.optim.optimizers import cosine_schedule, make_optimizer
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig, TrainerState
+
+REPORT_SCHEMA = 1
+
+
+def _vision_problem(cfg, args):
+    """Train/eval substrate for the paper's vision models: learnable
+    synthetic data, step-indexed batches (one cached shuffled epoch at a
+    time — deterministic, so rollback replays identical batches)."""
+    data = vision_dataset(cfg.name, 512, 256, cfg.input_hw, cfg.input_ch,
+                          cfg.n_classes, noise=0.3, seed=args.seed)
+    bpe = 512 // args.batch
+    epoch_cache: dict = {}
+
+    def batch_fn(step):
+        e, i = divmod(step, bpe)
+        if e not in epoch_cache:
+            epoch_cache.clear()
+            epoch_cache[e] = list(vision_batches(data, args.batch, epoch=e))
+        b = epoch_cache[e][i]
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    def evaluate(params, policy):
+        fwd = jax.jit(lambda p, x: vision_forward(p, x, cfg, policy))
+        logits = np.asarray(fwd(params, jnp.asarray(data["x_test"])))
+        return {"test_acc": float(
+            np.mean(np.argmax(logits, -1) == data["y_test"]))}
+
+    return {
+        "init": lambda seed: init_vision(jax.random.PRNGKey(seed), cfg),
+        "make_opt": lambda steps: make_optimizer("sgdm", args.lr),
+        "loss": lambda pol: (lambda p, b: vision_loss(p, b, cfg, pol)),
+        "batch_fn": batch_fn,
+        "evaluate": evaluate,
+    }
+
+
+def _lm_problem(cfg, args):
+    shape = ShapeConfig("faultsweep", args.seq, args.batch, "train")
+    return {
+        "init": lambda seed: init_lm(jax.random.PRNGKey(seed), cfg),
+        "make_opt": lambda steps: make_optimizer(
+            cfg.optimizer, cosine_schedule(args.lr, max(steps // 10, 1),
+                                           steps)),
+        "loss": lambda pol: (lambda p, b: lm_loss(p, b, cfg, pol)),
+        "batch_fn": lambda s: lm_batch(cfg, shape, s),
+        "evaluate": None,
+    }
+
+
+def run_fault_point(problem, policy, spec, *, steps: int, seed: int = 0,
+                    clip_norm: float = 1.0, ladder: bool = False,
+                    spike_factor: float = 0.0, spike_warmup: int = 2,
+                    ckpt_every: int = 0, max_retries: int = 1,
+                    log_fn=lambda s: None):
+    """Train ``steps`` optimizer steps with ``spec``'s faults injected
+    into every LUT and the divergence supervisor armed.
+
+    Returns a result dict: per-step losses, eval metrics (test accuracy
+    for vision problems — evaluated under the same faulted datapath),
+    supervisor trips, final ladder level and the trace count (asserted
+    ``== 1 + ladder_level`` by main() — one trace per numerics the run
+    actually used).
+    """
+    traces = [0]
+    opt = problem["make_opt"](steps)
+    cur_policy = [policy]
+
+    def make_step(pol):
+        base = problem["loss"](pol)
+
+        def loss_fn(p, b):
+            traces[0] += 1  # Python side effect: runs per TRACE
+            return base(p, b)
+        return jax.jit(make_train_step(loss_fn, opt, clip_norm=clip_norm))
+
+    def degrade_fn(level):
+        pol = policy
+        for _ in range(level):
+            pol = demote_numerics(pol)
+            if pol is None:
+                return None
+        cur_policy[0] = pol
+        log_fn(f"ladder level {level}: {pol}")
+        return make_step(pol)
+
+    params = problem["init"](seed)
+    opt_state = opt.init(params)
+    with tempfile.TemporaryDirectory(prefix="faultsweep_") as ckpt_dir, \
+            faults.inject(spec):
+        trainer = Trainer(
+            make_step(policy), problem["batch_fn"],
+            TrainerConfig(total_steps=steps, ckpt_dir=ckpt_dir,
+                          ckpt_every=ckpt_every or max(steps // 5, 1),
+                          keep=3, log_every=1, max_retries=max_retries,
+                          retry_window=max(steps // 2, 5),
+                          spike_factor=spike_factor,
+                          spike_warmup=spike_warmup,
+                          degrade_fn=degrade_fn if ladder else None,
+                          log_fn=log_fn))
+        state = trainer.run(TrainerState(params, opt_state))
+        evals = (problem["evaluate"](state.params, cur_policy[0])
+                 if problem["evaluate"] else {})
+    history = getattr(state, "history", [])
+    losses = [m["loss"] for _, m in history]
+    return {
+        "losses": losses,
+        "final_loss": losses[-1] if losses else None,
+        **evals,
+        "divergences": [(s, r, float(v)) for s, r, v in trainer.divergences],
+        "ladder_level": trainer.ladder_level,
+        "completed_steps": int(state.step),
+        "traces": traces[0],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="LUT fault-injection campaign (docs/robustness.md)")
+    ap.add_argument("--arch", default="lenet-300-100",
+                    help=f"vision model ({', '.join(VISION_REGISTRY)}) or "
+                         f"LM arch name")
+    ap.add_argument("--reduced", action="store_true",
+                    help="LM archs only: reduced config")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=32, help="LM archs only")
+    ap.add_argument("--lr", type=float, default=0.05,
+                    help="vision sgdm LR; LM runs want ~3e-4")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", default="amsim_jnp",
+                    help="execution mode the faulted LUTs run under "
+                         "(amsim = fused Pallas kernels)")
+    ap.add_argument("--multiplier", default="mitchell8")
+    ap.add_argument("--model", default="bitflip",
+                    choices=["bitflip", "stuck0", "stuck1"],
+                    help="fault model swept over --rates")
+    ap.add_argument("--rates", default="0,1e-3,1e-2,1e-1",
+                    help="comma-separated fault rates (0 = clean baseline)")
+    ap.add_argument("--clip-norm", type=float, default=1.0,
+                    help="gradient clip (0 disables — faults then reach "
+                         "the optimizer unattenuated)")
+    ap.add_argument("--ladder", action="store_true",
+                    help="arm the degradation ladder (demote numerics on "
+                         "repeated rollback instead of failing the point)")
+    ap.add_argument("--spike-factor", type=float, default=0.0,
+                    help="loss-spike detector threshold (k x running EMA; "
+                         "0 = non-finite sentinel only)")
+    ap.add_argument("--spike-warmup", type=int, default=2,
+                    help="steps of EMA seeding before the spike detector "
+                         "may fire")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="rollback checkpoint cadence (0 = steps/5); "
+                         "tighter cadence = less poisoned progress lost")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="rollbacks per ladder rung before demoting/failing")
+    ap.add_argument("--out", metavar="PATH", default=None)
+    args = ap.parse_args(argv)
+
+    if args.arch in VISION_REGISTRY:
+        cfg = VISION_REGISTRY[args.arch]
+        problem = _vision_problem(cfg, args)
+    else:
+        cfg = get_arch(args.arch)
+        if args.reduced:
+            cfg = reduced(cfg)
+        problem = _lm_problem(cfg, args)
+    policy = NumericsPolicy(mode=args.mode, multiplier=args.multiplier)
+    rates = [float(r) for r in args.rates.split(",") if r.strip()]
+    campaign = FaultCampaign.from_rates(args.model, rates, seed=args.seed)
+    common = dict(steps=args.steps, seed=args.seed,
+                  clip_norm=args.clip_norm, ladder=args.ladder,
+                  spike_factor=args.spike_factor,
+                  spike_warmup=args.spike_warmup,
+                  ckpt_every=args.ckpt_every,
+                  max_retries=args.max_retries)
+
+    report = {"schema": REPORT_SCHEMA, "arch": cfg.name,
+              "reduced": bool(args.reduced), "mode": args.mode,
+              "multiplier": args.multiplier, "model": args.model,
+              "steps": args.steps, "batch": args.batch, "lr": args.lr,
+              "seed": args.seed, "clip_norm": args.clip_norm,
+              "ladder": args.ladder, "points": []}
+
+    for label, spec in campaign:
+        desc = spec.describe() if spec else "off"
+        print(f"[faultsweep] point {label} ({desc})")
+        t0 = time.time()
+        try:
+            res = run_fault_point(
+                problem, policy, spec,
+                log_fn=lambda s: print(f"[faultsweep]   {s}"), **common)
+        except Exception as e:  # noqa: BLE001 — a dead point is a data point
+            print(f"[faultsweep]   point failed: {e!r}")
+            report["points"].append({
+                "label": label, "rate": (spec.rate if spec else 0.0),
+                "spec": (spec.to_json() if spec else None),
+                "error": repr(e), "final_loss": None,
+                "seconds": round(time.time() - t0, 2)})
+            continue
+        expect = 1 + res["ladder_level"]
+        assert res["traces"] == expect, \
+            f"point {label} retraced: {res['traces']} traces, " \
+            f"expected {expect} (1 + ladder rungs)"
+        entry = {"label": label, "rate": (spec.rate if spec else 0.0),
+                 "spec": (spec.to_json() if spec else None), **res,
+                 "seconds": round(time.time() - t0, 2)}
+        report["points"].append(entry)
+        stats = [f"final loss {entry['final_loss']:.4f}"
+                 if entry["final_loss"] is not None else "no steps"]
+        if "test_acc" in entry:
+            stats.append(f"test acc {entry['test_acc']:.3f}")
+        print(f"[faultsweep]   {', '.join(stats)}, "
+              f"{len(res['divergences'])} supervisor trips, "
+              f"ladder level {res['ladder_level']} "
+              f"({entry['seconds']:.1f}s)")
+
+    base = next((p for p in report["points"] if p["rate"] == 0.0), None)
+    if base and base.get("final_loss") is not None:
+        for p in report["points"]:
+            if p.get("final_loss") is not None:
+                p["final_vs_clean"] = p["final_loss"] - base["final_loss"]
+            if "test_acc" in p and "test_acc" in base:
+                p["acc_vs_clean"] = p["test_acc"] - base["test_acc"]
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[faultsweep] wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -176,17 +176,19 @@ def main():
         # pallas_call lowering.
         with mesh:
             step_fn = jax.jit(step_fn)
-            run_train(step_fn, cfg, shape, params, opt_state, args)
+            run_train(step_fn, cfg, shape, params, opt_state, args,
+                      shardings={"params": psh, "opt": osh})
     else:
         step_fn = jax.jit(step_fn)
         run_train(step_fn, cfg, shape, params, opt_state, args)
 
 
-def run_train(step_fn, cfg, shape, params, opt_state, args):
+def run_train(step_fn, cfg, shape, params, opt_state, args, shardings=None):
     batch_fn = lambda s: lm_batch(cfg, shape, s)
     trainer = Trainer(step_fn, batch_fn, TrainerConfig(
         total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-        ckpt_every=max(args.steps // 5, 1), log_every=max(args.steps // 10, 1)))
+        ckpt_every=max(args.steps // 5, 1),
+        log_every=max(args.steps // 10, 1)), shardings=shardings)
     state = trainer.run(TrainerState(params, opt_state))
     print(f"done at step {state.step}; stragglers flagged: "
           f"{len(state.stragglers)}")

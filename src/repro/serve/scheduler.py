@@ -85,7 +85,10 @@ def make_paged_prefill(cfg: ArchConfig, policy: Numerics,
                        window: Optional[int] = None, trace_counter=None):
     def paged_prefill(params, tokens, true_len, ptab, caches):
         """tokens (B, P) right-padded, true_len (B,) traced, ptab
-        (B, n_ptab) -> (next_token (B, 1), caches).
+        (B, n_ptab) -> (next_token (B, 1), ok (B,) bool, caches).
+        ``ok`` is the non-finite-logit sentinel: False marks a request
+        whose next-token distribution is poisoned (argmax would be
+        garbage) — the scheduler quarantines it instead of emitting.
 
         Padding garbage is harmless: queries past true_len are never
         read (the next token comes from position true_len - 1), their
@@ -104,7 +107,8 @@ def make_paged_prefill(cfg: ArchConfig, policy: Numerics,
         last = jnp.take_along_axis(logits, (true_len - 1)[:, None, None],
                                    axis=1)
         nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
-        return nxt, _strip_control(merged)
+        ok = jnp.isfinite(last[:, 0, :]).all(axis=-1)
+        return nxt, ok, _strip_control(merged)
     return paged_prefill
 
 
@@ -112,7 +116,9 @@ def make_paged_serve_step(cfg: ArchConfig, policy: Numerics,
                           window: Optional[int] = None, trace_counter=None):
     def paged_serve_step(params, tokens, live, start, ptab, caches):
         """One decode step over every slot of a lane: tokens (C, 1),
-        live (C,), start (C,), ptab (C, n_ptab) -> (next (C, 1), caches).
+        live (C,), start (C,), ptab (C, n_ptab) -> (next (C, 1),
+        ok (C,) bool, caches).  ``ok`` False = non-finite logits in that
+        slot (fault quarantine, docs/robustness.md).
 
         Dead slots ride along at fixed shape: their writes are routed to
         the trash page and their outputs discarded by the scheduler.
@@ -123,19 +129,32 @@ def make_paged_serve_step(cfg: ArchConfig, policy: Numerics,
         logits, merged, _ = lm_forward(params, tokens, cfg, policy,
                                        caches=merged, window=window)
         nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        return nxt, _strip_control(merged)
+        ok = jnp.isfinite(logits[:, -1, :]).all(axis=-1)
+        return nxt, ok, _strip_control(merged)
     return paged_serve_step
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request in the stream."""
+    """One generation request in the stream.
+
+    ``status`` is ``"ok"`` until the engine retires the request early:
+    ``"fault"`` (non-finite logits with no stronger tier to retry on) or
+    ``"deadline"`` (tick budget expired).  Early-retired requests keep
+    whatever tokens they emitted — partial output plus an honest status
+    beats argmax-of-NaN garbage.  ``expires_at`` is the absolute engine
+    tick the deadline lapses at (None = no deadline); ``retiers`` counts
+    fault re-admissions onto a stronger tier.
+    """
     rid: int
     prompt: list
     max_new_tokens: int
     tier: str
     out: list = dataclasses.field(default_factory=list)
     preemptions: int = 0
+    expires_at: Optional[int] = None
+    status: str = "ok"
+    retiers: int = 0
 
     @property
     def cur_prompt(self) -> list:
@@ -195,12 +214,17 @@ class ContinuousBatchingEngine:
         off).  With a window, pages whose every key has slid out are
         released mid-flight and admission skips pages that would be
         stale on arrival, so long streams hold ~window worth of pages.
+    fault_retier: optional tier name -> stronger tier name map.  When a
+        request's logits go non-finite (hardware fault in that tier's
+        approximate datapath, docs/robustness.md) it is re-admitted
+        once, from scratch, on the mapped tier; without a mapping — or
+        on a second fault — it retires with ``status="fault"``.
     """
 
     def __init__(self, cfg: ArchConfig, tiers, params, *,
                  max_len: int = 512, capacity: int = 4, page_size: int = 16,
                  n_pages: Optional[int] = None, window: Optional[int] = None,
-                 mesh=None):
+                 mesh=None, fault_retier: Optional[dict] = None):
         if not isinstance(tiers, dict):
             tiers = {"default": tiers}
         if not tiers:
@@ -232,16 +256,28 @@ class ContinuousBatchingEngine:
                         to_shardings(cache_pspecs(caches, mesh, capacity),
                                      mesh))
                 lane.caches = caches
+        self.fault_retier = dict(fault_retier or {})
+        for src, dst in self.fault_retier.items():
+            if src not in self._lanes or dst not in self._lanes:
+                raise ValueError(f"fault_retier {src!r} -> {dst!r}: both "
+                                 f"must be tiers in {sorted(self._lanes)}")
+            if src == dst:
+                raise ValueError(f"fault_retier maps {src!r} to itself")
         self._queue: deque[Request] = deque()
         self._next_rid = 0
         self._seq = 0
+        self.tick = 0
         self.finished: dict[int, Request] = {}
 
     # ------------------------------------------------------------- intake
-    def submit(self, prompt, max_new_tokens: int, tier: str = "default") -> int:
+    def submit(self, prompt, max_new_tokens: int, tier: str = "default", *,
+               deadline: Optional[int] = None) -> int:
         """Queue one request; returns its id.  Validates up front so a
         request that could never run (or could deadlock the pool) is
-        rejected at submit time, not mid-stream."""
+        rejected at submit time, not mid-stream.  ``deadline`` is a tick
+        budget: a request still unfinished ``deadline`` engine ticks
+        from now retires with ``status="deadline"`` and partial output
+        (per-request latency SLO)."""
         prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
         if not prompt:
             raise ValueError("empty prompt")
@@ -268,16 +304,23 @@ class ContinuousBatchingEngine:
                 f"request needs up to {need} pages resident but the "
                 f"{tier!r} lane pool only has {cap}; raise n_pages or "
                 f"page_size")
+        if deadline is not None and deadline < 1:
+            raise ValueError(f"deadline must be >= 1 tick, got {deadline}")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, prompt, max_new_tokens, tier))
+        self._queue.append(Request(
+            rid, prompt, max_new_tokens, tier,
+            expires_at=None if deadline is None else self.tick + deadline))
         return rid
 
     # ---------------------------------------------------------- scheduling
     def step(self) -> list[Request]:
-        """One scheduler tick; returns the requests that finished."""
+        """One scheduler tick; returns the requests that finished
+        (including early retirements — check ``Request.status``)."""
         finished: list[Request] = []
+        self.tick += 1
         with self._ctx():
+            self._expire_queued(finished)
             self._admit(finished)
             # Faults AFTER admission: a freshly admitted slot whose prompt
             # exactly fills its pages needs the next page before its first
@@ -286,23 +329,33 @@ class ContinuousBatchingEngine:
                 self._resolve_faults(lane)
             for lane in self._lanes.values():
                 self._decode(lane, finished)
+            for lane in self._lanes.values():
+                self._expire_resident(lane, finished)
         for req in finished:
             self.finished[req.rid] = req
         return finished
+
+    def _progress(self):
+        """Drain's liveness signal.  Besides queue/resident/token counts
+        it tracks retirements and re-tiers: a request that is admitted,
+        quarantined and re-queued on a stronger tier within one tick
+        leaves the first three fields unchanged but IS forward progress
+        (its retier count is bumped, and retiers are capped, so this
+        can't mask a genuine head-of-line deadlock)."""
+        return (len(self._queue),
+                sum(int(l.ctrl.live.sum()) for l in self._lanes.values()),
+                sum(len(r.out) for l in self._lanes.values()
+                    for r in l.slot_req if r is not None),
+                len(self.finished),
+                sum(r.retiers for r in self._queue))
 
     def drain(self) -> dict:
         """Tick until queue and slots are empty; returns rid -> tokens."""
         while self._queue or any(l.ctrl.live.any()
                                  for l in self._lanes.values()):
-            before = (len(self._queue),
-                      sum(int(l.ctrl.live.sum()) for l in self._lanes.values()),
-                      sum(len(r.out) for l in self._lanes.values()
-                          for r in l.slot_req if r is not None))
+            before = self._progress()
             self.step()
-            after = (len(self._queue),
-                     sum(int(l.ctrl.live.sum()) for l in self._lanes.values()),
-                     sum(len(r.out) for l in self._lanes.values()
-                         for r in l.slot_req if r is not None))
+            after = self._progress()
             if before == after and not any(
                     l.ctrl.live.any() for l in self._lanes.values()):
                 raise RuntimeError(
@@ -366,6 +419,49 @@ class ContinuousBatchingEngine:
         req.preemptions += 1
         self._queue.appendleft(req)
 
+    def _quarantine(self, req: Request, finished: list) -> None:
+        """Non-finite logits in ``req``'s slot: the emitted distribution
+        is poisoned, so no token is appended.  With a ``fault_retier``
+        mapping and a first fault, restart the request from scratch on
+        the stronger tier (its earlier tokens came off the faulty
+        datapath — discard them); otherwise retire with status="fault"."""
+        dst = self.fault_retier.get(req.tier)
+        if dst is not None and req.retiers == 0:
+            req.retiers += 1
+            req.tier = dst
+            req.out = []
+            self._queue.appendleft(req)
+        else:
+            req.status = "fault"
+            finished.append(req)
+
+    def _expire_queued(self, finished: list) -> None:
+        """Retire queued requests whose deadline lapsed before they ever
+        got (or re-got) a slot — they can no longer finish in budget."""
+        if not any(r.expires_at is not None for r in self._queue):
+            return
+        keep: deque[Request] = deque()
+        for req in self._queue:
+            if req.expires_at is not None and self.tick > req.expires_at:
+                req.status = "deadline"
+                finished.append(req)
+            else:
+                keep.append(req)
+        self._queue = keep
+
+    def _expire_resident(self, lane: _Lane, finished: list) -> None:
+        """Retire live slots whose tick budget is spent (after this
+        tick's decode, so a request gets exactly ``deadline`` ticks)."""
+        ctrl = lane.ctrl
+        for slot in range(self.capacity):
+            if not ctrl.live[slot]:
+                continue
+            req = lane.slot_req[slot]
+            if req.expires_at is not None and self.tick >= req.expires_at:
+                req.status = "deadline"
+                self._release_slot(lane, slot)
+                finished.append(req)
+
     def _release_slot(self, lane: _Lane, slot: int) -> None:
         lane.alloc.release(lane.slot_pages[slot].values())
         lane.slot_pages[slot] = {}
@@ -404,13 +500,17 @@ class ContinuousBatchingEngine:
             P = _bucket(m)
             toks = np.zeros((1, P), np.int32)
             toks[0, :m] = cur
-            nxt, lane.caches = lane.prefill(
+            nxt, ok, lane.caches = lane.prefill(
                 self.params, jnp.asarray(toks),
                 jnp.asarray([m], dtype=jnp.int32),
                 jnp.asarray(ctrl.ptab[slot:slot + 1]), lane.caches)
+            lane.slot_req[slot] = req
+            if not bool(np.asarray(ok)[0]):
+                self._release_slot(lane, slot)
+                self._quarantine(req, finished)
+                continue
             tok = int(np.asarray(nxt)[0, 0])
             req.out.append(tok)
-            lane.slot_req[slot] = req
             self._seq += 1
             lane.slot_seq[slot] = self._seq
             if req.done:
@@ -426,7 +526,7 @@ class ContinuousBatchingEngine:
         ctrl = lane.ctrl
         if not ctrl.live.any():
             return
-        nxt, lane.caches = lane.step(
+        nxt, ok, lane.caches = lane.step(
             self.params,
             jnp.asarray(ctrl.last_tok[:, None]),
             jnp.asarray(ctrl.live),
@@ -434,10 +534,15 @@ class ContinuousBatchingEngine:
             jnp.asarray(ctrl.ptab),
             lane.caches)
         nxt = np.asarray(nxt)[:, 0]
+        ok = np.asarray(ok)
         for slot in range(self.capacity):
             if not ctrl.live[slot]:
                 continue
             req = lane.slot_req[slot]
+            if not ok[slot]:
+                self._release_slot(lane, slot)
+                self._quarantine(req, finished)
+                continue
             tok = int(nxt[slot])
             req.out.append(tok)
             ctrl.start[slot] += 1

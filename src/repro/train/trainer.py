@@ -1,9 +1,24 @@
 """Supervised training loop: checkpoint/restart, retry supervision,
-straggler watchdog.  Works on CPU (paper-scale vision/LM runs) and under
-pjit meshes (launch/train.py wires the shardings).
+divergence detection, straggler watchdog.  Works on CPU (paper-scale
+vision/LM runs) and under pjit meshes (launch/train.py wires the
+shardings).
+
+Divergence supervision (docs/robustness.md): a hardware fault in the
+approximate datapath (core/faults.py) does not crash the process — it
+silently poisons the numerics until the loss explodes or goes NaN.  The
+supervisor turns both into a typed :class:`DivergenceError` *before* the
+poisoned state is advanced or checkpointed, so the crash routes through
+the same restore-and-retry path as a node failure.  When rollbacks alone
+can't help (a persistent stuck-at fault re-diverges every retry), the
+optional *degradation ladder* swaps in a progressively more conservative
+train step (typically demoting the numerics policy toward exact7/native
+via ``core.policy.demote_numerics``) and resets the retry budget —
+trading the approximate-multiplier speedup for forward progress instead
+of dying.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -12,6 +27,23 @@ import jax
 import numpy as np
 
 from repro.checkpoint.store import CheckpointManager
+
+
+class DivergenceError(RuntimeError):
+    """Training metrics went non-finite or spiked past the EMA band.
+
+    Raised by the supervisor *before* the offending state is kept, so
+    checkpoints never contain post-divergence params.  ``reason`` is
+    ``"non-finite"`` or ``"loss-spike"``; ``value`` the offending metric.
+    """
+
+    def __init__(self, step: int, reason: str, value: float,
+                 metric: str = "loss"):
+        super().__init__(f"step {step}: {metric} {reason} ({value!r})")
+        self.step = step
+        self.reason = reason
+        self.value = value
+        self.metric = metric
 
 
 @dataclass
@@ -23,6 +55,18 @@ class TrainerConfig:
     log_every: int = 50
     max_retries: int = 3            # restart-from-checkpoint budget
     straggler_factor: float = 3.0   # step slower than factor x median -> flag
+    # Divergence supervisor ------------------------------------------------
+    nonfinite_sentinel: bool = True  # NaN/inf in any metric -> DivergenceError
+    spike_factor: float = 0.0       # loss > factor x running EMA -> error
+    #                                 (0 disables the spike detector)
+    spike_warmup: int = 5           # steps of EMA seeding before it can fire
+    ema_beta: float = 0.9           # loss EMA decay
+    retry_window: int = 50          # consecutive clean steps that refill the
+    #                                 retry budget (0 = never refill)
+    # Degradation ladder: level (1, 2, ...) -> replacement train_step, or
+    # None when no safer rung exists.  Consulted when the retry budget is
+    # exhausted; a successful demotion resets the budget.
+    degrade_fn: Optional[Callable[[int], Optional[Callable]]] = None
     log_fn: Callable = print
 
 
@@ -37,37 +81,101 @@ class TrainerState:
 class Trainer:
     """Drives train_step with fault tolerance:
 
-    * checkpoints every ``ckpt_every`` steps (atomic, keep-K);
+    * checkpoints every ``ckpt_every`` steps (atomic, keep-K, CRC-tagged);
+    * a divergence supervisor raises :class:`DivergenceError` on
+      non-finite metrics or a loss spike past ``spike_factor`` x the
+      running EMA — *before* the diverged state replaces the good one;
     * on exception, restores the latest checkpoint and retries (up to
       ``max_retries``) — node-failure recovery with a step-indexed data
-      pipeline means no sample is double-counted;
+      pipeline means no sample is double-counted; ``retry_window`` clean
+      steps refill the budget so transient faults days apart don't
+      accumulate into a kill;
+    * when the budget is spent and ``degrade_fn`` is set, climbs the
+      degradation ladder: swaps in the next, more conservative
+      train_step and keeps going from the last good checkpoint;
     * wall-time watchdog records steps slower than ``straggler_factor`` x
       the running median (straggler mitigation signal for the launcher).
+
+    After ``run``: ``self.divergences`` lists every supervisor trip as
+    ``(step, reason, value)`` and ``self.ladder_level`` the final rung
+    (0 = never demoted).
     """
 
-    def __init__(self, train_step, batch_fn, cfg: TrainerConfig):
+    def __init__(self, train_step, batch_fn, cfg: TrainerConfig,
+                 shardings=None):
         self.train_step = train_step
         self.batch_fn = batch_fn       # step -> batch
         self.cfg = cfg
         self.mgr = (CheckpointManager(cfg.ckpt_dir, cfg.keep)
                     if cfg.ckpt_dir else None)
+        # Optional {"params": ..., "opt": ...} tree of NamedSharding:
+        # restores device_put straight back onto the mesh, so a resumed
+        # step runs the same sharded executable (and reduction order)
+        # as the uninterrupted run — bitwise resume under pjit.
+        self.shardings = shardings
+        self.divergences: list[tuple[int, str, float]] = []
+        self.ladder_level = 0
 
     def _maybe_restore(self, state: TrainerState) -> TrainerState:
         if self.mgr is None:
             return state
         tree = {"params": state.params, "opt": state.opt_state}
-        restored, meta = self.mgr.restore_latest(tree)
+        restored, meta = self.mgr.restore_latest(tree, self.shardings)
         if restored is None:
             return state
+        # Keep the straggler record across rollbacks — it is host-side
+        # telemetry about the *run*, not part of the model state.
         return TrainerState(restored["params"], restored["opt"],
-                            step=int(meta["step"]))
+                            step=int(meta["step"]),
+                            stragglers=state.stragglers)
+
+    def _check_divergence(self, step: int, metrics: dict,
+                          ema: Optional[float]) -> float | None:
+        """Raise DivergenceError if metrics look diverged; else return the
+        updated loss EMA (None when no loss metric is present)."""
+        cfg = self.cfg
+        if cfg.nonfinite_sentinel:
+            for k, v in metrics.items():
+                v = float(v)
+                if not math.isfinite(v):
+                    self.divergences.append((step, "non-finite", v))
+                    raise DivergenceError(step, "non-finite", v, metric=k)
+        if "loss" not in metrics:
+            return ema
+        loss = float(metrics["loss"])
+        if cfg.spike_factor > 0 and ema is not None:
+            if step > cfg.spike_warmup and loss > cfg.spike_factor * ema:
+                self.divergences.append((step, "loss-spike", loss))
+                raise DivergenceError(step, "loss-spike", loss)
+        return loss if ema is None else (
+            cfg.ema_beta * ema + (1 - cfg.ema_beta) * loss)
+
+    def _next_rung(self, state: TrainerState) -> TrainerState:
+        """Retry budget exhausted: demote to the next ladder rung or give
+        up (re-raise).  Returns the restored state to continue from."""
+        cfg = self.cfg
+        if cfg.degrade_fn is None:
+            raise  # noqa: PLE0704  (re-raise the active exception)
+        nxt = cfg.degrade_fn(self.ladder_level + 1)
+        if nxt is None:
+            cfg.log_fn(f"[supervisor] degradation ladder exhausted at level "
+                       f"{self.ladder_level}; giving up")
+            raise
+        self.ladder_level += 1
+        self.train_step = nxt
+        cfg.log_fn(f"[supervisor] demoting to ladder level "
+                   f"{self.ladder_level}; retry budget reset")
+        return self._maybe_restore(state)
 
     def run(self, state: TrainerState) -> TrainerState:
         cfg = self.cfg
         state = self._maybe_restore(state)
         retries = 0
+        clean_steps = 0                # consecutive OK steps since last fault
+        ema: Optional[float] = None    # running loss EMA (spike detector)
         times: list[float] = []
         history = []
+        last_saved = -1
         while state.step < cfg.total_steps:
             try:
                 t0 = time.time()
@@ -76,8 +184,17 @@ class Trainer:
                     state.params, state.opt_state, batch)
                 jax.block_until_ready(jax.tree.leaves(metrics)[0])
                 dt = time.time() - t0
+                # Supervisor gate: diverged state must never become
+                # `state` (and so can never be checkpointed below).
+                ema = self._check_divergence(state.step + 1, metrics, ema)
                 state = TrainerState(params, opt_state, state.step + 1,
                                      state.stragglers)
+                clean_steps += 1
+                if retries and cfg.retry_window and \
+                        clean_steps >= cfg.retry_window:
+                    cfg.log_fn(f"[supervisor] {clean_steps} clean steps — "
+                               f"retry budget reset")
+                    retries = 0
                 times.append(dt)
                 med = float(np.median(times[-50:]))
                 if len(times) > 5 and dt > cfg.straggler_factor * med:
@@ -93,16 +210,23 @@ class Trainer:
                     self.mgr.save(state.step,
                                   {"params": state.params,
                                    "opt": state.opt_state})
+                    last_saved = state.step
             except KeyboardInterrupt:
                 raise
-            except Exception as e:  # node failure model: restore + retry
+            except Exception as e:  # node failure / divergence: restore+retry
                 retries += 1
+                clean_steps = 0
+                ema = None  # re-seed the spike detector after rollback
                 cfg.log_fn(f"[supervisor] step {state.step} failed ({e!r}); "
                            f"retry {retries}/{cfg.max_retries} from checkpoint")
-                if retries > cfg.max_retries or self.mgr is None:
+                if self.mgr is None:
                     raise
-                state = self._maybe_restore(state)
-        if self.mgr:
+                if retries > cfg.max_retries:
+                    state = self._next_rung(state)  # re-raises when no rung
+                    retries = 0
+                else:
+                    state = self._maybe_restore(state)
+        if self.mgr and state.step != last_saved:
             self.mgr.save(state.step,
                           {"params": state.params, "opt": state.opt_state})
         state.history = history  # type: ignore[attr-defined]

@@ -1,0 +1,200 @@
+"""Hardware-fault injection (core/faults.py + the kernels/ops.py seam):
+spec grammar, seeded reproducibility, packed/unpacked equivalence, the
+off-switch object-identity contract, and the campaign runner's
+monotone degradation curve (slow tier)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.faults import FaultCampaign, FaultSpec, apply_faults, parse_spec
+from repro.core.lutgen import get_lut, get_packed_lut, unpack_lut
+from repro.core.multipliers import get_multiplier
+from repro.core.policy import NumericsPolicy
+from repro.kernels import ops
+
+MULT = get_multiplier("mitchell8")
+M = MULT.mantissa_bits
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_spec():
+    """Every test starts and ends with the seam off (module state is
+    process-global)."""
+    faults.clear_active()
+    yield
+    faults.clear_active()
+
+
+# ------------------------------------------------------------ spec grammar
+def test_parse_spec_grammar():
+    s = parse_spec("bitflip:rate=1e-3,seed=7,mult=mitchell8")
+    assert s == FaultSpec(kind="bitflip", rate=1e-3, seed=7, mult="mitchell8")
+    b = parse_spec("burst:axis=col,width=2,bit=3,start=40")
+    assert (b.kind, b.axis, b.width, b.bit, b.start) == \
+        ("burst", "col", 2, 3, 40)
+    # describe() -> parse_spec() round-trips
+    assert parse_spec(s.describe()) == s
+    assert parse_spec(b.describe().replace("start=auto", "start=40")
+                      .replace("bit=auto", "bit=3")) == b
+    # an already-built spec passes through
+    assert parse_spec(s) is s
+
+
+@pytest.mark.parametrize("bad", [
+    "", "gamma:rate=0.1", "bitflip:rate=2.0", "bitflip:frob=1",
+    "bitflip:rate", "burst:axis=diag", "burst:width=0",
+])
+def test_parse_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_spec(bad)
+
+
+def test_campaign_from_rates():
+    c = FaultCampaign.from_rates("bitflip", [0, 1e-3, 1e-1], seed=3)
+    assert len(c) == 3
+    pts = list(c)
+    assert pts[0] == ("rate=0", None)          # fault-free control point
+    assert pts[1][1] == FaultSpec(kind="bitflip", rate=1e-3, seed=3)
+    assert pts[2][0] == "rate=0.1"
+
+
+# ----------------------------------------------------- applying to tables
+def test_apply_is_seeded_and_pure():
+    lut = get_lut(MULT)
+    a = apply_faults(lut, M, FaultSpec(rate=1e-3, seed=5), packed=False,
+                     mult=MULT.name)
+    b = apply_faults(lut, M, FaultSpec(rate=1e-3, seed=5), packed=False,
+                     mult=MULT.name)
+    np.testing.assert_array_equal(a, b)          # reproducible
+    assert a is not lut and b is not lut         # never mutates the cache
+    assert (a != lut).any()
+    c = apply_faults(lut, M, FaultSpec(rate=1e-3, seed=6), packed=False,
+                     mult=MULT.name)
+    assert (a != c).any()                        # seed actually matters
+
+
+def test_bitflip_rate_scales():
+    lut = get_lut(MULT)
+    nbits = M + 1
+    for rate in (1e-3, 1e-2):
+        out = apply_faults(lut, M, FaultSpec(rate=rate, seed=0),
+                           packed=False, mult=MULT.name)
+        flipped = np.unpackbits(
+            (out ^ lut).view(np.uint8)).sum()
+        expect = lut.size * nbits * rate
+        assert 0.5 * expect <= flipped <= 1.5 * expect
+
+
+def test_stuck_models_are_monotone():
+    lut = get_lut(MULT)
+    s1 = apply_faults(lut, M, FaultSpec(kind="stuck1", rate=1e-2, seed=0),
+                      packed=False, mult=MULT.name)
+    s0 = apply_faults(lut, M, FaultSpec(kind="stuck0", rate=1e-2, seed=0),
+                      packed=False, mult=MULT.name)
+    assert (s1 != lut).any() and (s0 != lut).any()
+    np.testing.assert_array_equal(s1 | lut, s1)   # stuck1 only sets bits
+    np.testing.assert_array_equal(s0 & lut, s0)   # stuck0 only clears
+
+
+def test_burst_corrupts_exactly_the_band():
+    lut = get_lut(MULT)
+    n = 1 << M
+    spec = FaultSpec(kind="burst", axis="row", start=n - 1, width=2, bit=3)
+    out = apply_faults(lut, M, spec, packed=False, mult=MULT.name)
+    diff = (out ^ lut).reshape(n, n)
+    rows = {0, n - 1}                              # band wraps mod n
+    mask = np.uint32(1 << (3 + 23 - M))            # canonical-layout bit
+    for r in range(n):
+        if r in rows:
+            assert (diff[r] == mask).all()
+        else:
+            assert (diff[r] == 0).all()
+
+
+def test_packed_unpacked_equivalence():
+    """The same spec faults the packed uint16 and canonical uint32
+    layouts identically (canonical significant-bit indexing)."""
+    packed = get_packed_lut(MULT)
+    assert packed is not None, "mitchell8 should pack"
+    lut = get_lut(MULT)
+    spec = FaultSpec(rate=1e-2, seed=11)
+    fp = apply_faults(packed, M, spec, packed=True, mult=MULT.name)
+    fu = apply_faults(lut, M, spec, packed=False, mult=MULT.name)
+    np.testing.assert_array_equal(unpack_lut(fp, M), fu)
+
+
+def test_mult_targeting():
+    lut = get_lut(MULT)
+    spec = FaultSpec(rate=0.5, seed=0, mult="afm16")
+    assert apply_faults(lut, M, spec, packed=False, mult=MULT.name) is lut
+    hit = apply_faults(lut, M, spec, packed=False, mult="afm16")
+    assert (hit != lut).any()
+
+
+# --------------------------------------------------- activation + the seam
+def test_off_is_object_identity():
+    lut = get_lut(MULT)
+    assert faults.active_spec() is None
+    assert faults.faulted_lut(lut, M, packed=False, mult=MULT.name) is lut
+    assert ops._oracle_lut(MULT) is lut            # the real seam, off
+
+
+def test_inject_scopes_and_restores(monkeypatch):
+    lut = get_lut(MULT)
+    with faults.inject("bitflip:rate=1e-2,seed=0") as spec:
+        assert faults.active_spec() == spec
+        out = faults.faulted_lut(lut, M, packed=False, mult=MULT.name)
+        assert out is not lut and (out != lut).any()
+        np.testing.assert_array_equal(out, ops._oracle_lut(MULT))
+    assert faults.active_spec() is None
+    assert ops._oracle_lut(MULT) is lut
+    # env var activation, and programmatic force-off overriding it
+    monkeypatch.setenv("REPRO_FAULTS", "stuck1:rate=1e-3,seed=2")
+    assert faults.active_spec() == FaultSpec(kind="stuck1", rate=1e-3, seed=2)
+    faults.set_active(None)
+    assert faults.active_spec() is None
+    faults.clear_active()
+    assert faults.active_spec().kind == "stuck1"
+
+
+def test_injected_trace_differs_and_recovers():
+    """End to end through the jnp oracle: a faulted trace produces
+    different numerics; a fresh trace after the context exits is
+    bitwise-identical to the clean one."""
+    pol = NumericsPolicy(mode="amsim_jnp", multiplier=MULT.name)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    f = lambda x, y: ops.policy_matmul(x, y, pol, "wg")
+    clean = np.asarray(jax.jit(f)(a, b))
+    with faults.inject("bitflip:rate=0.05,seed=1"):
+        bad = np.asarray(jax.jit(lambda x, y: f(x, y))(a, b))
+    again = np.asarray(jax.jit(lambda x, y: (f(x, y),))(a, b))[0]
+    assert (clean != bad).any()
+    np.testing.assert_array_equal(clean, again)
+
+
+# ---------------------------------------------------- campaign (slow tier)
+@pytest.mark.slow
+def test_fault_campaign_monotone_degradation(tmp_path):
+    """The paper-style resilience curve: LeNet test accuracy degrades
+    monotonically (within tolerance) as the bit-flip rate rises."""
+    import json
+
+    from repro.launch import faultsweep
+
+    out = tmp_path / "report.json"
+    faultsweep.main([
+        "--arch", "lenet-300-100", "--steps", "40", "--batch", "64",
+        "--lr", "0.05", "--model", "bitflip",
+        "--rates", "0,1e-1,0.5", "--out", str(out)])
+    rep = json.loads(out.read_text())
+    accs = [p["test_acc"] for p in rep["points"]]
+    assert len(accs) == 3 and all(a is not None for a in accs)
+    assert accs[0] > 0.9                      # clean run learns the task
+    assert accs[0] >= accs[1] - 0.05          # monotone within noise
+    assert accs[1] >= accs[2] - 0.05
+    assert accs[2] < accs[0] - 0.3            # rate 0.5 visibly destroys it
+    assert all(p["traces"] == 1 for p in rep["points"])

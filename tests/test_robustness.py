@@ -1,0 +1,308 @@
+"""Divergence supervisor + degradation ladder (train/trainer.py),
+numerics demotion (core/policy.py), and CRC-verified checkpoint
+walk-back (checkpoint/store.py) — docs/robustness.md."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (CheckpointCorruptError, CheckpointManager,
+                                    load_pytree, save_pytree)
+from repro.core.policy import (NumericsPolicy, PolicyTable, PolicyRule,
+                               demote_numerics)
+from repro.train.trainer import (DivergenceError, Trainer, TrainerConfig,
+                                 TrainerState)
+
+QUIET = dict(log_every=1000, log_fn=lambda *a: None)
+
+
+def _scripted_trainer(tmp_path, total, *, faults=None, **cfg_kw):
+    """A counting train-step harness: params = {"w": step counter}; each
+    applied step increments it, so after a clean finish ``w ==
+    total_steps`` regardless of how many rollbacks happened.  ``faults``
+    maps a step index (the step being computed, 1-based) to a one-shot
+    payload: an Exception to raise or a float to report as the loss."""
+    armed = dict(faults or {})
+
+    def train_step(params, opt_state, batch):
+        step = int(params["w"]) + 1
+        if step in armed:
+            payload = armed.pop(step)
+            if isinstance(payload, Exception):
+                raise payload
+            loss = float(payload)
+        else:
+            loss = 1.0
+        return ({"w": params["w"] + 1}, opt_state, {"loss": loss})
+
+    cfg = TrainerConfig(total_steps=total, ckpt_dir=str(tmp_path),
+                        ckpt_every=2, **QUIET, **cfg_kw)
+    return Trainer(train_step, lambda s: s, cfg), armed
+
+
+# ---------------------------------------------------------- supervisor
+def test_nonfinite_sentinel_rolls_back_and_completes(tmp_path):
+    tr, armed = _scripted_trainer(tmp_path, 8, faults={5: float("nan")})
+    st = tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert st.step == 8 and float(st.params["w"]) == 8.0
+    assert not armed                           # the NaN step actually ran
+    assert len(tr.divergences) == 1
+    step, reason, value = tr.divergences[0]
+    assert (step, reason) == (5, "non-finite") and np.isnan(value)
+
+
+def test_nonfinite_state_is_never_checkpointed(tmp_path):
+    """The diverged step's params must not survive: every checkpoint on
+    disk holds the counter value equal to its step (the poisoned +1 was
+    discarded before state advanced)."""
+    tr, _ = _scripted_trainer(tmp_path, 6, faults={3: float("inf")})
+    tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    mgr = CheckpointManager(tmp_path, log_fn=lambda *a: None)
+    steps = mgr._steps()
+    assert steps, "trainer never checkpointed"
+    for step in steps:
+        tree, meta = load_pytree(mgr.path(step), {"params": {"w": 0.0},
+                                                  "opt": {}})
+        assert float(tree["params"]["w"]) == meta["step"]
+
+
+def test_spike_detector_trips_before_nan(tmp_path):
+    tr, _ = _scripted_trainer(tmp_path, 10, faults={6: 1e3},
+                              spike_factor=10.0, spike_warmup=2)
+    st = tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert st.step == 10
+    assert tr.divergences == [(6, "loss-spike", 1e3)]
+
+
+def test_spike_detector_off_by_default(tmp_path):
+    tr, _ = _scripted_trainer(tmp_path, 10, faults={6: 1e3})
+    st = tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert st.step == 10 and tr.divergences == []
+
+
+def test_retry_budget_refills_after_clean_window(tmp_path):
+    """Two one-shot failures far apart must survive max_retries=1: the
+    clean-step window between them refills the budget."""
+    tr, armed = _scripted_trainer(
+        tmp_path, 20, faults={4: RuntimeError("a"), 15: RuntimeError("b")},
+        max_retries=1, retry_window=5)
+    st = tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert st.step == 20 and float(st.params["w"]) == 20.0 and not armed
+
+
+def test_no_checkpoint_dir_reraises():
+    def bad_step(p, o, b):
+        raise RuntimeError("boom")
+    tr = Trainer(bad_step, lambda s: s,
+                 TrainerConfig(total_steps=2, **QUIET))
+    with pytest.raises(RuntimeError, match="boom"):
+        tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+
+    def nan_step(p, o, b):
+        return (p, o, {"loss": float("nan")})
+    tr2 = Trainer(nan_step, lambda s: s,
+                  TrainerConfig(total_steps=2, **QUIET))
+    with pytest.raises(DivergenceError) as ei:   # typed, with context
+        tr2.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert (ei.value.step, ei.value.reason) == (1, "non-finite")
+
+
+def test_final_save_skipped_when_step_lands_on_cadence(tmp_path):
+    saves = []
+    tr, _ = _scripted_trainer(tmp_path, 4)      # ckpt_every=2: saves 2, 4
+    orig = tr.mgr.save
+    tr.mgr.save = lambda step, tree, **kw: (saves.append(step),
+                                            orig(step, tree, **kw))
+    tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert saves == [2, 4]                      # no duplicate final save
+
+    saves2 = []
+    tr2, _ = _scripted_trainer(tmp_path / "b", 5)
+    orig2 = tr2.mgr.save
+    tr2.mgr.save = lambda step, tree, **kw: (saves2.append(step),
+                                             orig2(step, tree, **kw))
+    tr2.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert saves2 == [2, 4, 5]                  # off-cadence: final save runs
+
+
+def test_straggler_record_survives_restore(tmp_path):
+    tr, _ = _scripted_trainer(tmp_path, 4)
+    tr.mgr.save(2, {"params": {"w": jnp.asarray(2.0)}, "opt": {}})
+    st = TrainerState({"w": jnp.asarray(0.0)}, {},
+                      stragglers=[(1, 9.0, 1.0)])
+    restored = tr._maybe_restore(st)
+    assert restored.step == 2
+    assert restored.stragglers == [(1, 9.0, 1.0)]
+
+
+# ------------------------------------------------------- degradation ladder
+def test_ladder_demotes_and_completes(tmp_path):
+    """A persistent fault (the same step keeps failing) exhausts the
+    retry budget; the ladder swaps in a working step and the run
+    finishes without human intervention."""
+    calls = {"bad": 0}
+
+    def flaky_step(params, opt_state, batch):
+        step = int(params["w"]) + 1
+        if step == 3:
+            calls["bad"] += 1
+            raise RuntimeError("persistent fault at step 3")
+        return ({"w": params["w"] + 1}, opt_state, {"loss": 1.0})
+
+    def good_step(params, opt_state, batch):
+        return ({"w": params["w"] + 1}, opt_state, {"loss": 1.0})
+
+    def degrade(level):
+        return good_step if level == 1 else None
+
+    cfg = TrainerConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=2,
+                        max_retries=2, degrade_fn=degrade, **QUIET)
+    tr = Trainer(flaky_step, lambda s: s, cfg)
+    st = tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert st.step == 6 and float(st.params["w"]) == 6.0
+    assert tr.ladder_level == 1
+    assert calls["bad"] == 3                    # initial try + 2 retries
+
+
+def test_ladder_exhaustion_reraises(tmp_path):
+    def bad_step(params, opt_state, batch):
+        raise RuntimeError("unfixable")
+
+    cfg = TrainerConfig(total_steps=4, ckpt_dir=str(tmp_path), ckpt_every=2,
+                        max_retries=0, degrade_fn=lambda level: None, **QUIET)
+    tr = Trainer(bad_step, lambda s: s, cfg)
+    with pytest.raises(RuntimeError, match="unfixable"):
+        tr.run(TrainerState({"w": jnp.asarray(0.0)}, {}))
+    assert tr.ladder_level == 0
+
+
+# ------------------------------------------------------------ demotion
+def test_demote_numerics_flat_ladder():
+    p = NumericsPolicy(mode="amsim_jnp", multiplier="mitchell8")
+    r1 = demote_numerics(p)
+    assert (r1.mode, r1.multiplier) == ("amsim_jnp", "exact7")
+    r2 = demote_numerics(r1)
+    assert (r2.mode, r2.multiplier) == ("native", "fp32")
+    assert demote_numerics(r2) is None
+    assert demote_numerics(NumericsPolicy()) is None
+
+
+def test_demote_numerics_table():
+    t = PolicyTable((
+        PolicyRule(site="conv", mode="amsim_jnp", multiplier="mitchell8"),
+        PolicyRule(mode="native", multiplier="fp32"),
+    ))
+    d1 = demote_numerics(t)
+    assert isinstance(d1, PolicyTable)
+    assert d1.rules[0].multiplier == "exact7"
+    assert d1.rules[1].multiplier == "fp32"      # native leaf untouched
+    d2 = demote_numerics(d1)
+    assert (d2.rules[0].mode, d2.rules[0].multiplier) == ("native", "fp32")
+    assert demote_numerics(d2) is None
+
+
+# --------------------------------------------------------- checkpoint CRC
+def _tree():
+    return {"a": jnp.arange(8, dtype=jnp.float32),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32)}}
+
+
+def test_crc_roundtrip_and_meta(tmp_path):
+    p = tmp_path / "x.npz"
+    save_pytree(p, _tree(), extra={"step": 3})
+    got, meta = load_pytree(p, _tree())
+    assert meta == {"step": 3}                  # __crc__ is stripped
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_crc_mismatch_raises(tmp_path):
+    p = tmp_path / "x.npz"
+    save_pytree(p, _tree(), extra={"step": 3})
+    # Rewrite one leaf but keep the original CRC map: bit rot.
+    with np.load(p) as z:
+        flat = {k: z[k] for k in z.files}
+    arr = flat["a"].copy()
+    arr[0] += 1.0
+    flat["a"] = arr
+    np.savez(p, **flat)
+    with pytest.raises(CheckpointCorruptError, match="CRC mismatch"):
+        load_pytree(p, _tree())
+    got, _ = load_pytree(p, _tree(), verify=False)   # escape hatch
+    assert float(np.asarray(got["a"])[0]) == 1.0
+
+
+def test_truncated_file_raises_corrupt(tmp_path):
+    p = tmp_path / "x.npz"
+    save_pytree(p, _tree())
+    raw = p.read_bytes()
+    p.write_bytes(raw[: len(raw) // 2])
+    with pytest.raises(CheckpointCorruptError, match="unreadable"):
+        load_pytree(p, _tree())
+
+
+def test_pre_crc_checkpoint_loads_unverified(tmp_path):
+    """Files written before CRC tagging (no __crc__ in meta) restore."""
+    p = tmp_path / "old.npz"
+    flat = {"a": np.arange(8, dtype=np.float32),
+            "b/c": np.asarray([1, 2], np.int32),
+            "__meta__": np.frombuffer(json.dumps({"step": 1}).encode(),
+                                      dtype=np.uint8)}
+    np.savez(p, **flat)
+    got, meta = load_pytree(p, _tree())
+    assert meta == {"step": 1}
+
+
+def test_restore_latest_walks_back_past_corruption(tmp_path):
+    logs = []
+    mgr = CheckpointManager(tmp_path, keep=3, log_fn=logs.append)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree())
+    # Corrupt the newest file.
+    newest = mgr.path(3)
+    newest.write_bytes(newest.read_bytes()[:64])
+    tree, meta = mgr.restore_latest(_tree())
+    assert meta["step"] == 2                   # fell back, did not die
+    assert any("falling back" in str(m) for m in logs)
+
+    # All corrupt -> raise (restarting from scratch would hide data loss).
+    for s in (1, 2):
+        path = mgr.path(s)
+        path.write_bytes(path.read_bytes()[:64])
+    with pytest.raises(CheckpointCorruptError, match="all 3 checkpoints"):
+        mgr.restore_latest(_tree())
+
+
+def test_restore_latest_empty_dir(tmp_path):
+    mgr = CheckpointManager(tmp_path / "none", log_fn=lambda *a: None)
+    assert mgr.restore_latest(_tree()) == (None, None)
+
+
+# ----------------------------------------------- e2e fault -> ladder rescue
+def test_e2e_bitflip_nan_is_rescued_by_ladder():
+    """The acceptance scenario end to end through the production pieces:
+    a seeded bit-flip campaign point diverges under aggressive LR, the
+    supervisor detects it (spike detector first, while checkpoints are
+    still healthy), rolls back, exhausts retries, demotes down the
+    numerics ladder and completes — no human intervention."""
+    from repro.configs.paper_models import VISION_REGISTRY
+    from repro.core.faults import FaultSpec
+    from repro.launch.faultsweep import _vision_problem, run_fault_point
+
+    class _A:
+        seed = 0
+        batch = 64
+        lr = 20.0                               # aggressive: faults explode
+
+    problem = _vision_problem(VISION_REGISTRY["lenet-300-100"], _A)
+    policy = NumericsPolicy(mode="amsim_jnp", multiplier="mitchell8")
+    res = run_fault_point(
+        problem, policy, FaultSpec(kind="bitflip", rate=0.5, seed=0),
+        steps=15, seed=0, clip_norm=0.0, ladder=True, spike_factor=10.0,
+        spike_warmup=1, ckpt_every=1, max_retries=1)
+    assert res["completed_steps"] == 15         # the run finished
+    assert res["divergences"], "supervisor never tripped"
+    assert res["ladder_level"] >= 1             # rescue came from demotion
+    assert res["traces"] == 1 + res["ladder_level"]
+    assert np.isfinite(res["final_loss"])

@@ -1,0 +1,223 @@
+"""Fault-aware serving (serve/scheduler.py + docs/robustness.md):
+per-request deadlines, non-finite-logit quarantine, and re-admission on
+a stronger tier via ``fault_retier``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.policy import NumericsPolicy
+from repro.models.transformer import init_lm
+from repro.serve.scheduler import ContinuousBatchingEngine
+
+NATIVE = NumericsPolicy()
+AMSIM = NumericsPolicy(mode="amsim_jnp", multiplier="afm16")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+    params = init_lm(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=n).tolist() for n in lengths]
+
+
+def _poison_decode(lane):
+    """Wrap a lane's decode step so every slot reports non-finite
+    logits — a deterministic stand-in for a faulty datapath."""
+    orig = lane.step
+
+    def bad(*a):
+        nxt, ok, caches = orig(*a)
+        return nxt, jnp.zeros_like(ok), caches
+    lane.step = bad
+
+
+def _poison_prefill(lane):
+    orig = lane.prefill
+
+    def bad(*a):
+        nxt, ok, caches = orig(*a)
+        return nxt, jnp.zeros_like(ok), caches
+    lane.prefill = bad
+
+
+# -------------------------------------------------------------- deadlines
+def test_deadline_validation(setup):
+    cfg, params = setup
+    cbe = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=32,
+                                   capacity=1, page_size=4)
+    with pytest.raises(ValueError, match="deadline"):
+        cbe.submit(_prompts(cfg, [4])[0], 4, deadline=0)
+
+
+def test_queued_deadline_expires(setup):
+    """capacity=1: the second request starves behind the first and its
+    deadline lapses while still queued — retired with no tokens."""
+    cfg, params = setup
+    cbe = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=32,
+                                   capacity=1, page_size=4)
+    p1, p2 = _prompts(cfg, [6, 6])
+    r1 = cbe.submit(p1, 12)
+    r2 = cbe.submit(p2, 4, deadline=2)
+    out = cbe.drain()
+    assert len(out[r1]) == 12
+    assert cbe.finished[r1].status == "ok"
+    assert cbe.finished[r2].status == "deadline"
+    assert out[r2] == []                        # never ran a single step
+
+
+def test_resident_deadline_partial_output(setup):
+    cfg, params = setup
+    cbe = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=64,
+                                   capacity=1, page_size=4)
+    p = _prompts(cfg, [6])[0]
+    rid = cbe.submit(p, 20, deadline=4)
+    out = cbe.drain()
+    req = cbe.finished[rid]
+    assert req.status == "deadline"
+    assert 0 < len(out[rid]) < 20               # partial, honest output
+    # The emitted prefix matches an undeadlined oracle run bit-for-bit.
+    cbe2 = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=64,
+                                    capacity=1, page_size=4)
+    r2 = cbe2.submit(p, 20)
+    full = cbe2.drain()[r2]
+    assert out[rid] == full[: len(out[rid])]
+
+
+def test_no_deadline_unchanged(setup):
+    cfg, params = setup
+    cbe = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=32,
+                                   capacity=2, page_size=4)
+    rids = [cbe.submit(p, 6) for p in _prompts(cfg, [5, 9])]
+    out = cbe.drain()
+    assert all(len(out[r]) == 6 for r in rids)
+    assert all(cbe.finished[r].status == "ok" for r in rids)
+
+
+# ------------------------------------------------------------- quarantine
+def test_decode_fault_quarantines_without_retier(setup):
+    cfg, params = setup
+    cbe = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=32,
+                                   capacity=2, page_size=4)
+    rid = cbe.submit(_prompts(cfg, [6])[0], 8)
+    _poison_decode(cbe._lanes["default"])
+    out = cbe.drain()
+    req = cbe.finished[rid]
+    assert req.status == "fault"
+    assert len(out[rid]) == 1                   # the prefill token only
+    # Pages and slots were released — the lane is fully drained.
+    lane = cbe._lanes["default"]
+    assert not lane.ctrl.live.any()
+    assert lane.alloc.capacity == lane.alloc.n_free
+
+
+def test_prefill_fault_quarantines(setup):
+    cfg, params = setup
+    cbe = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=32,
+                                   capacity=2, page_size=4)
+    rid = cbe.submit(_prompts(cfg, [6])[0], 8)
+    _poison_prefill(cbe._lanes["default"])
+    out = cbe.drain()
+    assert cbe.finished[rid].status == "fault"
+    assert out[rid] == []                       # poisoned logits: no token
+
+
+def test_fault_retier_readmits_from_scratch(setup):
+    """A faulted cheap-tier request restarts on the exact tier: earlier
+    cheap tokens are discarded and the final output is bit-identical to
+    a request submitted to the exact tier directly."""
+    cfg, params = setup
+    tiers = {"exact": NATIVE, "cheap": AMSIM}
+    p = _prompts(cfg, [6])[0]
+
+    cbe = ContinuousBatchingEngine(cfg, tiers, params, max_len=32,
+                                   capacity=2, page_size=4,
+                                   fault_retier={"cheap": "exact"})
+    _poison_decode(cbe._lanes["cheap"])
+    rid = cbe.submit(p, 6, tier="cheap")
+    out = cbe.drain()
+    req = cbe.finished[rid]
+    assert req.status == "ok" and req.retiers == 1 and req.tier == "exact"
+    assert len(out[rid]) == 6
+
+    oracle = ContinuousBatchingEngine(cfg, tiers, params, max_len=32,
+                                      capacity=2, page_size=4)
+    r2 = oracle.submit(p, 6, tier="exact")
+    assert out[rid] == oracle.drain()[r2]
+
+
+def test_fault_retier_second_fault_retires(setup):
+    cfg, params = setup
+    tiers = {"exact": NATIVE, "cheap": AMSIM}
+    cbe = ContinuousBatchingEngine(cfg, tiers, params, max_len=32,
+                                   capacity=2, page_size=4,
+                                   fault_retier={"cheap": "exact"})
+    _poison_decode(cbe._lanes["cheap"])
+    _poison_decode(cbe._lanes["exact"])         # the strong tier fails too
+    rid = cbe.submit(_prompts(cfg, [6])[0], 6, tier="cheap")
+    cbe.drain()
+    req = cbe.finished[rid]
+    assert req.status == "fault" and req.retiers == 1
+
+
+def test_fault_retier_validation(setup):
+    cfg, params = setup
+    tiers = {"exact": NATIVE, "cheap": AMSIM}
+    with pytest.raises(ValueError, match="both"):
+        ContinuousBatchingEngine(cfg, tiers, params, max_len=32,
+                                 capacity=1, page_size=4,
+                                 fault_retier={"cheap": "gold"})
+    with pytest.raises(ValueError, match="itself"):
+        ContinuousBatchingEngine(cfg, tiers, params, max_len=32,
+                                 capacity=1, page_size=4,
+                                 fault_retier={"cheap": "cheap"})
+
+
+def test_poisoned_params_fault_end_to_end(setup):
+    """No monkeypatching: NaN weights make the real prefill emit
+    non-finite logits and the on-device finite check quarantines the
+    request."""
+    cfg, params = setup
+    bad = jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), params)
+    cbe = ContinuousBatchingEngine(cfg, NATIVE, bad, max_len=32,
+                                   capacity=1, page_size=4)
+    rid = cbe.submit(_prompts(cfg, [6])[0], 4)
+    out = cbe.drain()
+    assert cbe.finished[rid].status == "fault"
+    assert out[rid] == []
+
+
+def test_healthy_neighbours_survive_slot_fault(setup):
+    """Quarantine is per-slot: poison only one slot's ok flag and the
+    other resident request keeps decoding to completion."""
+    cfg, params = setup
+    cbe = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=32,
+                                   capacity=2, page_size=4)
+    p1, p2 = _prompts(cfg, [6, 9])
+    r1 = cbe.submit(p1, 6)
+    r2 = cbe.submit(p2, 6)
+    cbe.step()                                  # both admitted
+    lane = cbe._lanes["default"]
+    slot1 = next(s for s in range(cbe.capacity)
+                 if lane.slot_req[s] is not None
+                 and lane.slot_req[s].rid == r1)
+    orig = lane.step
+
+    def poison_slot1(*a):
+        nxt, ok, caches = orig(*a)
+        return nxt, ok.at[slot1].set(False), caches
+    lane.step = poison_slot1
+    out = cbe.drain()
+    assert cbe.finished[r1].status == "fault"
+    assert cbe.finished[r2].status == "ok" and len(out[r2]) == 6
+    # The survivor's tokens match a solo run bit-for-bit.
+    solo = ContinuousBatchingEngine(cfg, NATIVE, params, max_len=32,
+                                    capacity=2, page_size=4)
+    rs = solo.submit(p2, 6)
+    assert out[r2] == solo.drain()[rs]
