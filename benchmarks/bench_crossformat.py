@@ -1,22 +1,81 @@
-"""Table IV: cross-format train/test matrix.
+"""Cross-format numerics benches.
 
-Train LeNet-300-100 once per multiplier, then evaluate each trained model
-under every OTHER multiplier — the paper's no-multiplier-overfitting
-experiment.  Diagonal = matched train/test; off-diagonal deltas should be
-small (paper: within 0.1%)."""
+Full run — Table IV train/test matrix: train LeNet-300-100 once per
+multiplier, then evaluate each trained model under every OTHER
+multiplier — the paper's no-multiplier-overfitting experiment.
+Diagonal = matched train/test; off-diagonal deltas should be small
+(paper: within 0.1%).
+
+Smoke run (the CI kernel lane) — generated mixed-precision LUTs: the
+staged-pipeline fp16 x bf16 table through the GEMM and fused-attention
+engines, with the bit-exactness contract asserted in-line (kernel ==
+einsum oracle running the same generated LUT) and informational timing
+rows against the same-width hand-written bf16 table."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.bench_convergence import MULTIPLIERS, train_one
-from benchmarks.common import emit
-from repro.configs.paper_models import LENET_300_100
-from repro.data.pipeline import vision_dataset
-from repro.models.vision import vision_forward
+from benchmarks.common import emit, time_fn
+from repro.core.lutgen import get_lut
+from repro.core.multipliers import get_multiplier
 
 
-def main(epochs=2, n_train=512):
+def _smoke():
+    from repro.core.policy import NumericsPolicy
+    from repro.kernels.approx_attention import approx_attention_fused
+    from repro.kernels.approx_gemm import approx_gemm
+    from repro.kernels.ops import attend_einsum
+
+    cross = get_multiplier("fp16xbf16")
+    base = get_multiplier("bf16")
+    rng = np.random.default_rng(0)
+
+    # GEMM: generated cross-format table vs hand-written bf16 (both
+    # M-bit LUT gathers; the ratio is the generated-table overhead,
+    # informational — table width differs, so no gate).
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    luts = {m.name: jnp.asarray(get_lut(m)) for m in (cross, base)}
+
+    def gemm(m):
+        f = jax.jit(lambda x, y: approx_gemm(x, y, luts[m.name],
+                                             m.mantissa_bits))
+        return time_fn(f, a, b, iters=5, best=True)
+
+    t_cross, t_base = gemm(cross), gemm(base)
+    emit("crossformat_gemm_fp16xbf16_us", t_cross,
+         f"vs_bf16={t_cross / t_base:.2f}x", norm=t_cross / t_base)
+
+    # Attention: fused kernel with the generated table must match the
+    # einsum oracle bit-for-bit — the conformance contract, asserted
+    # here so the CI bench lane exercises it on the real engine path.
+    B, S, KV, G, dh = 2, 32, 2, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, KV * G, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    fused = lambda: approx_attention_fused(  # noqa: E731
+        q, k, v, pos, pos, luts[cross.name], cross.mantissa_bits,
+        causal=True, interpret=True)
+    oracle = attend_einsum(
+        q, k, v, pos, pos,
+        NumericsPolicy(mode="amsim_jnp", multiplier=cross.name),
+        causal=True, window=0)
+    np.testing.assert_array_equal(np.asarray(fused()), np.asarray(oracle))
+    emit("crossformat_attention_bitexact", time_fn(fused, iters=3),
+         "fused==einsum_oracle")
+
+
+def main(smoke: bool = False, epochs=2, n_train=512):
+    if smoke:
+        return _smoke()
+    from benchmarks.bench_convergence import MULTIPLIERS, train_one
+    from repro.configs.paper_models import LENET_300_100
+    from repro.data.pipeline import vision_dataset
+    from repro.models.vision import vision_forward
+
     cfg = LENET_300_100
     data = vision_dataset("crossfmt", n_train, 512, cfg.input_hw,
                           cfg.input_ch, cfg.n_classes)

@@ -32,13 +32,16 @@ def _sections(smoke: bool):
     # Smoke (the CI gate) imports only the engine benches; an
     # import-time error in an unused full-run module must not brick it.
     from benchmarks import (bench_attention, bench_batched_gemm,
-                            bench_conv2d, bench_decode_chain, bench_faults,
+                            bench_conv2d, bench_crossformat,
+                            bench_decode_chain, bench_faults,
                             bench_policy_table, bench_serving)
 
     if smoke:
         return [
             ("Batched approx-GEMM engine (smoke)",
              lambda: bench_batched_gemm.main(smoke=True), "kernels"),
+            ("Cross-format generated LUTs (smoke)",
+             lambda: bench_crossformat.main(smoke=True), "kernels"),
             ("Fused approx-conv2d engine (smoke)",
              lambda: bench_conv2d.main(smoke=True), "kernels"),
             ("Fused approx-attention engine (smoke)",

@@ -25,6 +25,34 @@ CARRY_BIT = np.uint32(0x0080_0000)  # bit 23: LUT carry flag (paper Alg. 1 l.14)
 EXP_BIAS = 127
 MNT_BITS = 23
 
+# Storage-format registry: name -> significand *fraction* bits (Table II
+# style (1, 8, m) formats).  The simulation stack models the MANTISSA
+# aspect of a format only — operands live in FP32 words and sign/exponent
+# arithmetic is always the 8-bit-exponent flow of Alg. 2, so formats with
+# narrower exponents (fp16's 5 bits, the fp8s) are simulated as their
+# (1, 8, m) wide-exponent counterparts.  Consumed by the cross-format
+# multiplier grammar in ``multipliers.get_multiplier`` ("fp16xbf16") and
+# the staged-pipeline generator (``fpstages``); docs/numerics.md has the
+# coverage table.
+FLOAT_FORMATS = {
+    "fp32": 23,
+    "tf32": 10,
+    "fp16": 10,
+    "bf16": 7,
+    "fp8e4m3": 3,
+    "fp8e5m2": 2,
+}
+
+
+def format_mantissa_bits(fmt: str) -> int:
+    """Fraction bits of a named storage format (``FLOAT_FORMATS``)."""
+    try:
+        return FLOAT_FORMATS[fmt]
+    except KeyError:
+        raise ValueError(
+            f"unknown float format {fmt!r}; have {sorted(FLOAT_FORMATS)}"
+        ) from None
+
 
 # ---------------------------------------------------------------- numpy side
 def np_bits(x) -> np.ndarray:

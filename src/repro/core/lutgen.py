@@ -38,8 +38,37 @@ PACK_MAX_M = 15
 _SAFE_EXP = 127
 
 
+def _pipeline_generation_enabled() -> bool:
+    """REPRO_PIPELINE_LUT=0 forces pipeline multipliers through the
+    black-box Algorithm-1 path (np_mul probing) instead of exhaustive
+    staged-integer emission.  Both paths must agree bit-for-bit (tested);
+    the switch exists as a validation seam and escape hatch."""
+    return os.environ.get("REPRO_PIPELINE_LUT", "1").lower() not in (
+        "0", "false", "off")
+
+
 def generate_lut(multiplier: Multiplier, M: int | None = None) -> np.ndarray:
-    """Run Algorithm 1 against ``multiplier``; returns uint32[2^(2M)]."""
+    """Run Algorithm 1 against ``multiplier``; returns uint32[2^(2M)].
+
+    Pipeline-generated multipliers (``multiplier.pipeline`` set) are
+    emitted directly by the staged integer pipeline (``fpstages
+    .pipeline_lut``) when the table M matches the spec — bit-identical
+    to black-box probing, but with carry-overflow validation and no
+    float round-trip.  Any other M (or REPRO_PIPELINE_LUT=0) falls back
+    to the black-box path, which re-quantises the probe grid at M
+    exactly as for hand-written models.
+    """
+    spec = getattr(multiplier, "pipeline", None)
+    if (spec is not None and _pipeline_generation_enabled()
+            and (M is None or M == spec.table_bits)):
+        from .fpstages import pipeline_lut
+
+        return pipeline_lut(spec)
+    return _generate_lut_blackbox(multiplier, M)
+
+
+def _generate_lut_blackbox(multiplier: Multiplier, M: int | None = None) -> np.ndarray:
+    """The paper's Algorithm 1 proper: probe ``np_mul`` on the mantissa grid."""
     M = multiplier.mantissa_bits if M is None else M
     if not 1 <= M <= 12:
         raise ValueError(f"LUT mantissa bits must be in [1,12], got {M}")

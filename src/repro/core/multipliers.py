@@ -40,15 +40,20 @@ and jnp (the GPU/TPU "direct simulation" baseline of Fig. 6).
 from __future__ import annotations
 
 import dataclasses
+import difflib
+import re
 from functools import partial
-from typing import Callable
+from typing import Any, Callable
 
 import numpy as np
 import jax.numpy as jnp
 
 from .float_bits import (
+    EXP_MASK,
+    FLOAT_FORMATS,
     MNT_BITS,
     MNT_MASK,
+    SIGN_MASK,
     np_bits,
     np_float,
     np_pack,
@@ -214,6 +219,21 @@ class Multiplier:
     np_mul: Callable
     jnp_mul: Callable
     exact_family: bool = False  # mantissa product exact up to truncation?
+    # Staged-pipeline provenance (fpstages.PipelineSpec) for generated
+    # multipliers; None for the hand-written zoo.  Carries the per-operand
+    # widths of cross-format pipelines (see ``operand_bits``).
+    pipeline: Any = None
+
+    @property
+    def operand_bits(self) -> tuple[int, int]:
+        """(ma, mb) significant mantissa bits of operand A / B.
+
+        Hand-written families are symmetric; cross-format pipelines carry
+        per-operand widths (the surrogate GEMM path truncates each
+        operand to its own format before the native multiply)."""
+        if self.pipeline is not None:
+            return (self.pipeline.ma_bits, self.pipeline.mb_bits)
+        return (self.mantissa_bits, self.mantissa_bits)
 
     def __call__(self, a, b):
         return self.np_mul(a, b)
@@ -230,6 +250,19 @@ _CORES = {
 _EXACT_FAMILY = {"exact", "trunc", "bf16"}
 
 
+def _jnp_flush_denormals(x):
+    """Flush denormal float32 values to (signed) zero, in jnp.
+
+    The functional models and AMSim are flush-to-zero (Alg. 2 line 13);
+    the native f32 multiply used by the jnp exact-family twin does
+    *gradual* underflow, so without this flush the twin diverges bitwise
+    from the numpy model on denormal inputs and denormally-small
+    products (docs/numerics.md "Denormal contract")."""
+    u = jnp_bits(jnp.asarray(x, jnp.float32))
+    den = (u & jnp.uint32(EXP_MASK)) == 0
+    return jnp_float(jnp.where(den, u & jnp.uint32(SIGN_MASK), u))
+
+
 def _jnp_exact_family_mul(family: str, M: int, a, b):
     """jnp twin for the exact-mantissa family, in the float domain.
 
@@ -239,17 +272,24 @@ def _jnp_exact_family_mul(family: str, M: int, a, b):
     M <= 11: (M+1)-bit significand products fit f32's 24-bit mantissa),
     quantize the product.  For M=23 'exact' this is the IEEE multiply
     itself.  M in [12, 22] non-exact corner documented; LUTs cap at 12.
+
+    Denormal in/outputs are flushed to zero to match the FTZ contract of
+    the numpy model (the product flush approximates ``e <= 0``: it
+    catches every denormally-small product; the half-ulp of exponent
+    where the true product rounds up into the min-normal binade is the
+    documented residual divergence, see docs/numerics.md).
     """
     from .float_bits import jnp_round_mantissa, jnp_truncate_mantissa
 
-    a = jnp.asarray(a, jnp.float32)
-    b = jnp.asarray(b, jnp.float32)
+    a = _jnp_flush_denormals(a)
+    b = _jnp_flush_denormals(b)
     if family == "exact" or (family == "bf16" and M >= 23):
-        return a * b
+        return _jnp_flush_denormals(a * b)
     # Operand conversion is truncation (paper §VII: "bit-truncation");
     # only the final product is rounded (bf16) or truncated (trunc).
     qr = jnp_round_mantissa if family == "bf16" else jnp_truncate_mantissa
-    return qr(jnp_truncate_mantissa(a, M) * jnp_truncate_mantissa(b, M), M)
+    p = jnp_truncate_mantissa(a, M) * jnp_truncate_mantissa(b, M)
+    return _jnp_flush_denormals(qr(p, M))
 
 
 def make_multiplier(family: str, mantissa_bits: int = 23) -> Multiplier:
@@ -299,13 +339,101 @@ REGISTRY.update({
 })
 
 
+# Dynamically-built multipliers (cross-format pipelines, user specs
+# added via register_multiplier).  Kept out of REGISTRY so the canonical
+# zoo stays enumerable; get_multiplier consults both.  Memoised so
+# repeated lookups return the *same* object (LUT process caches key on
+# identity-stable names).
+_DYNAMIC: dict[str, Multiplier] = {}
+
+# '<fmt_a>x<fmt_b>[_trunc|_sr<seed>]' — cross-format staged pipelines
+# (exact core).  RNE is the default rounding and is canonical without a
+# suffix ('fp16xbf16'); '_rne' is accepted and normalised away.
+_CROSS_RE = re.compile(
+    r"^(?P<fa>" + "|".join(sorted(FLOAT_FORMATS, key=len, reverse=True))
+    + r")x(?P<fb>" + "|".join(sorted(FLOAT_FORMATS, key=len, reverse=True))
+    + r")(?:_(?P<rnd>rne|trunc|sr(?P<seed>\d+)))?$"
+)
+
+
+def register_multiplier(mult: Multiplier, *aliases: str) -> Multiplier:
+    """Register a (typically pipeline-generated) multiplier by name.
+
+    Makes the name resolvable through ``get_multiplier`` — and therefore
+    usable in ``PolicyTable`` rules, autotune cache keys and the fault
+    seam.  Re-registering the same object is a no-op; a name collision
+    with a *different* model raises (silently shadowing a canonical
+    multiplier would corrupt LUT disk caches keyed by name).
+    """
+    for key in (mult.name, *aliases):
+        existing = REGISTRY.get(key) or _DYNAMIC.get(key)
+        if existing is not None and existing is not mult:
+            raise ValueError(
+                f"multiplier name {key!r} is already registered "
+                f"(to {existing.name!r})")
+        _DYNAMIC[key] = mult
+    return mult
+
+
+def _parse_cross_format(name: str) -> Multiplier | None:
+    m = _CROSS_RE.match(name)
+    if not m:
+        return None
+    from . import fpstages
+
+    rnd = m.group("rnd") or "rne"
+    seed = int(m.group("seed") or 0)
+    rounding = {"rne": "rne", "trunc": "truncate"}.get(rnd, "stochastic")
+    suffix = "" if rounding == "rne" else f"_{rnd}"
+    canonical = f"{m.group('fa')}x{m.group('fb')}{suffix}"
+    if canonical not in _DYNAMIC:
+        spec = fpstages.cross_format_spec(
+            m.group("fa"), m.group("fb"), rounding=rounding, seed=seed)
+        register_multiplier(
+            fpstages.make_pipeline_multiplier(spec, name=canonical))
+    mult = _DYNAMIC[canonical]
+    if name != canonical:
+        _DYNAMIC.setdefault(name, mult)
+    return mult
+
+
+def _unknown_multiplier_error(name: str) -> ValueError:
+    candidates = sorted(
+        set(REGISTRY)
+        | set(_DYNAMIC)
+        | {f"{a}x{b}" for a in FLOAT_FORMATS for b in FLOAT_FORMATS}
+        | {f"{fam}7" for fam in _CORES}
+    )
+    msg = (
+        f"unknown multiplier {name!r}. Known names: {', '.join(sorted(REGISTRY))}. "
+        f"Also parsed: '<family><M>' with family in {sorted(_CORES)}, and "
+        f"cross-format '<fmt>x<fmt>[_trunc|_sr<seed>]' with fmt in "
+        f"{sorted(FLOAT_FORMATS)}."
+    )
+    close = difflib.get_close_matches(name, candidates, n=1, cutoff=0.6)
+    if close:
+        msg += f" Did you mean {close[0]!r}?"
+    return ValueError(msg)
+
+
 def get_multiplier(name: str) -> Multiplier:
-    """Look up a canonical multiplier or parse '<family><M>' (e.g. 'afm7')."""
+    """Resolve a multiplier name.
+
+    In order: the canonical registry, dynamically-registered names,
+    '<family><M>' (e.g. 'afm7'), then the cross-format grammar
+    '<fmt_a>x<fmt_b>[_trunc|_sr<seed>]' (e.g. 'fp16xbf16').  Unknown
+    names raise with the known-name list and a nearest-match hint.
+    """
     if name in REGISTRY:
         return REGISTRY[name]
+    if name in _DYNAMIC:
+        return _DYNAMIC[name]
     for fam in _CORES:
         if name.startswith(fam):
             suffix = name[len(fam):]
             if suffix.isdigit():
                 return make_multiplier(fam, int(suffix))
-    raise ValueError(f"unknown multiplier {name!r}")
+    cross = _parse_cross_format(name)
+    if cross is not None:
+        return cross
+    raise _unknown_multiplier_error(name)

@@ -40,6 +40,16 @@ policy consumed by the kernels (``kernels/ops.py`` is the single seam).
 Accumulation is always FP32 (paper §VII); LUTs are fetched from a
 process-level cache at trace time and embedded as constants.
 
+Multiplier names in rules are validated through
+``multipliers.get_multiplier`` and therefore accept the full grammar:
+canonical zoo names (``afm16``), ``<family><M>`` (``mitchell8``) and
+*format-qualified* cross-format pipelines (``fp16xbf16``,
+``fp16xbf16_trunc``, ``fp16xbf16_sr7`` — fpstages-generated, operand A
+is the format before the ``x``).  Cross-format tables are positional:
+in backward GEMMs the gradient rides in whichever slot the kernel's
+contraction puts it (da = g @ b^T puts g in slot A), so per-pass rules
+(``qkv.dw=...``) are the lever for controlling gradient formats.
+
 Schema, precedence and the sweep-runner workflow: docs/policies.md.
 """
 from __future__ import annotations
@@ -441,6 +451,9 @@ def table_from_assignments(spec: str, *, default: tuple[str, str] | None = None,
     combined ``<site-or-family>.<pass>`` (e.g. ``qkv.dw=native``);
     values are ``native``, a multiplier name (mode = ``default_mode``,
     i.e. the fused LUT kernels), or an explicit ``mode:multiplier``.
+    Multiplier names take the full grammar, including cross-format
+    pipelines — ``"qkv=fp16xbf16,dw=native"`` runs fp16-activation x
+    bf16-weight forward GEMMs with exact weight gradients.
     ``default=`` (or the ``default`` argument) supplies the wildcard
     rule; without either, unassigned sites run native.
 

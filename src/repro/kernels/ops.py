@@ -159,10 +159,16 @@ def _matmul_nograd(a, b, policy: NumericsPolicy):
         # restructuring, so GSPMD sharding propagates exactly as in
         # native mode (no spurious all-gathers).
         mult = get_multiplier(policy.multiplier)
-        M = mult.mantissa_bits
-        rnd = (jnp_round_mantissa if mult.name.startswith("bf16")
+        # Cross-format pipelines truncate each operand to its own format
+        # width (fp16 activations x bf16 weights); symmetric multipliers
+        # see ma == mb == mantissa_bits.
+        ma, mb = mult.operand_bits
+        # Pipeline specs always truncate operands (DenormStage); of the
+        # hand-written zoo only bf16 rounds them.
+        rnd = (jnp_round_mantissa
+               if mult.pipeline is None and mult.name.startswith("bf16")
                else jnp_truncate_mantissa)
-        return jnp.matmul(rnd(a, M), rnd(b, M),
+        return jnp.matmul(rnd(a, ma), rnd(b, mb),
                           preferred_element_type=jnp.float32)
     if a.ndim == 2 and b.ndim == 2:
         return _gemm2d(a, b, policy)

@@ -1,0 +1,218 @@
+"""Exhaustive multiplier conformance: full grids, golden digests, kernels.
+
+Three layers of lock-down for the generator-as-authority contract:
+
+1. **Full-grid conformance** (tier-1): every family's complete
+   2^M x 2^M mantissa grid at M=7, executed three ways — the functional
+   model (``np_mul``), the LUT (``np_amsim_multiply``) and the staged
+   pipeline oracle (``fpstages.pipeline_multiply``) — must agree
+   *bitwise*.  Nightly (``-m slow``) runs the full cross-format
+   fp16 x bf16 grid the same way.
+2. **Golden CRC32 digests** (tier-1 + the bench-kernels CI lane via
+   tools/check_golden.py): silent LUT drift from lutgen/fpstages edits
+   fails loudly even when relative tests still pass.
+3. **Kernel bit-exactness**: a generated cross-format table through the
+   Pallas GEMM kernel (chunk=1, so the kernel's FP32 accumulation order
+   matches a sequential numpy loop) against a pure-numpy staged oracle,
+   and through the fused attention kernel against the einsum oracle
+   whose every multiply is the same staged-verified LUT.
+"""
+import json
+import zlib
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fpstages as fs
+from repro.core.amsim import np_amsim_multiply
+from repro.core.float_bits import np_bits, np_float, np_pack
+from repro.core.lutgen import generate_lut, get_lut
+from repro.core.multipliers import get_multiplier
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "lut_digests.json"
+
+# family name -> staged spec (the conformance oracle).
+ORACLE_SPECS = {
+    "bf16": fs.PipelineSpec(7, 7, 7),
+    "exact7": fs.PipelineSpec(7, 7, 7),
+    "trunc16": fs.PipelineSpec(7, 7, 7, round=fs.RoundStage("truncate")),
+    "mit16": fs.PipelineSpec(7, 7, 7, core=fs.MulCoreStage("mitchell"),
+                             round=fs.RoundStage("truncate")),
+    "afm16": fs.PipelineSpec(7, 7, 7, core=fs.MulCoreStage("afm"),
+                             round=fs.RoundStage("truncate")),
+    "realm16": fs.PipelineSpec(7, 7, 7, core=fs.MulCoreStage("realm"),
+                               round=fs.RoundStage("truncate")),
+}
+
+
+def _grid_floats(M: int, exp_a: int = 127, exp_b: int = 127):
+    """All 2^M x 2^M mantissa-pair floats at fixed exponents."""
+    n = 1 << M
+    f = np.arange(n, dtype=np.uint32) << np.uint32(23 - M)
+    a = np_float(np_pack(0, exp_a, f))[:, None]
+    b = np_float(np_pack(0, exp_b, f))[None, :]
+    return np.broadcast_arrays(a, b)
+
+
+# ------------------------------------------------------- full-grid (tier-1)
+@pytest.mark.parametrize("name", sorted(ORACLE_SPECS))
+def test_full_grid_model_lut_and_staged_oracle_agree(name):
+    """Model == LUT == staged pipeline, bitwise, on the COMPLETE grid."""
+    m = get_multiplier(name)
+    spec = ORACLE_SPECS[name]
+    a, b = _grid_floats(7)
+    model = np_bits(m.np_mul(a, b))
+    lutted = np_bits(np_amsim_multiply(a, b, get_lut(m, 7), 7))
+    staged = np_bits(fs.pipeline_multiply(spec, a, b))
+    np.testing.assert_array_equal(model, staged)
+    np.testing.assert_array_equal(lutted, staged)
+
+
+@pytest.mark.parametrize("name", sorted(ORACLE_SPECS))
+@pytest.mark.parametrize("exp_a,exp_b", [(1, 127), (126, 2), (254, 1),
+                                         (200, 182), (60, 66)])
+def test_exponent_boundary_grid_lut_vs_staged(name, exp_a, exp_b):
+    """Subsampled mantissa grid at exponent extremes: the staged oracle
+    must reproduce the LUT's flush/overflow semantics bit-for-bit
+    (underflow uses the pre-carry exponent, Alg. 2 line 13)."""
+    m = get_multiplier(name)
+    a, b = _grid_floats(7, exp_a, exp_b)
+    a, b = a[::3, ::3], b[::3, ::3]
+    staged = np_bits(fs.pipeline_multiply(ORACLE_SPECS[name], a, b))
+    lutted = np_bits(np_amsim_multiply(a, b, get_lut(m, 7), 7))
+    np.testing.assert_array_equal(staged, lutted)
+
+
+# --------------------------------------------------- cross-format full grid
+def test_cross_format_subgrid_tier1():
+    """Tier-1 slice of the fp16 x bf16 grid (full grid rides nightly)."""
+    m = get_multiplier("fp16xbf16")
+    a, b = _grid_floats(10)
+    a, b = a[::7, ::5], b[::7, ::5]
+    staged = np_bits(fs.pipeline_multiply(m.pipeline, a, b))
+    lutted = np_bits(np_amsim_multiply(a, b, get_lut(m), 10))
+    np.testing.assert_array_equal(staged, lutted)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["fp16xbf16", "fp16xbf16_trunc",
+                                  "bf16xfp16"])
+def test_cross_format_full_grid_nightly(name):
+    """The complete 2^10 x 2^10 cross-format grid, model == LUT ==
+    staged, at the safe exponent and at an underflow-boundary pair."""
+    m = get_multiplier(name)
+    for exps in [(127, 127), (40, 87)]:
+        a, b = _grid_floats(10, *exps)
+        staged = np_bits(fs.pipeline_multiply(m.pipeline, a, b))
+        lutted = np_bits(np_amsim_multiply(a, b, get_lut(m), 10))
+        np.testing.assert_array_equal(staged, lutted)
+
+
+# ------------------------------------------------------------ golden digests
+def test_golden_lut_digests_match():
+    """CRC32 of every canonical table must match tests/golden/ — silent
+    LUT drift (lutgen refactor, fpstages edit) fails here even if every
+    relative property still holds.  Bless intentional changes with
+    ``python tools/check_golden.py --update``."""
+    golden = json.loads(GOLDEN_PATH.read_text())
+    assert golden, "golden digest file is empty"
+    for key, want in sorted(golden.items()):
+        name, m = key.rsplit("@M", 1)
+        lut = generate_lut(get_multiplier(name), int(m))
+        got = f"{zlib.crc32(lut.tobytes()) & 0xFFFFFFFF:08x}"
+        assert got == want, (
+            f"LUT digest drift for {key}: golden {want}, regenerated {got} "
+            f"(bless with tools/check_golden.py --update if intentional)")
+
+
+def test_golden_covers_every_headline_family():
+    golden = json.loads(GOLDEN_PATH.read_text())
+    for need in ("bf16@M7", "trunc16@M7", "mit16@M7", "afm16@M7",
+                 "realm16@M7", "fp16xbf16@M10"):
+        assert need in golden
+
+
+# --------------------------------------------------- kernel-level conformance
+def _np_staged_gemm(spec, a, b):
+    """Sequential per-k FP32 accumulation with the staged multiply —
+    matches the Pallas kernel's chunk=1 reduction order exactly."""
+    m, k = a.shape
+    _, n = b.shape
+    acc = np.zeros((m, n), np.float32)
+    for i in range(k):
+        acc = acc + fs.pipeline_multiply(spec, a[:, i:i + 1], b[i:i + 1, :])
+    return acc
+
+
+def test_cross_format_gemm_bitexact_vs_numpy_staged_oracle(rng):
+    """Acceptance: the generated fp16 x bf16 table through the Pallas
+    GEMM kernel == pure-numpy staged oracle, bit-for-bit."""
+    from repro.kernels.approx_gemm import approx_gemm
+
+    m = get_multiplier("fp16xbf16")
+    a = (rng.standard_normal((48, 32)) * 4).astype(np.float32)
+    b = (rng.standard_normal((32, 40)) * 4).astype(np.float32)
+    out = approx_gemm(jnp.asarray(a), jnp.asarray(b), get_lut(m),
+                      m.mantissa_bits, bm=48, bn=40, bk=32, chunk=1,
+                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  _np_staged_gemm(m.pipeline, a, b))
+
+
+def test_cross_format_batched_gemm_bitexact(rng):
+    from repro.kernels.approx_gemm import approx_gemm_batched
+
+    m = get_multiplier("fp16xbf16_trunc")
+    a = (rng.standard_normal((2, 16, 32)) * 3).astype(np.float32)
+    b = (rng.standard_normal((2, 32, 24)) * 3).astype(np.float32)
+    out = np.asarray(approx_gemm_batched(
+        jnp.asarray(a), jnp.asarray(b), get_lut(m), m.mantissa_bits,
+        bm=16, bn=24, bk=32, chunk=1, interpret=True))
+    for i in range(2):
+        np.testing.assert_array_equal(out[i],
+                                      _np_staged_gemm(m.pipeline, a[i], b[i]))
+
+
+def test_cross_format_attention_bitexact_vs_einsum_oracle(rng):
+    """Acceptance: fp16 x bf16 through the fused attention kernel ==
+    the einsum oracle, whose every multiply is the generated LUT — and
+    that LUT is bitwise-pinned to the numpy staged oracle by the grid
+    tests above, closing the chain kernel -> LUT -> staged reference."""
+    from repro.core.policy import NumericsPolicy
+    from repro.kernels.approx_attention import approx_attention_fused
+    from repro.kernels.ops import attend_einsum
+
+    m = get_multiplier("fp16xbf16")
+    B, S, KV, G, dh, T = 2, 6, 2, 2, 8, 6
+    q = jnp.asarray(rng.standard_normal((B, S, KV * G, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, KV, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, dh)), jnp.float32)
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    oracle = attend_einsum(
+        q, k, v, q_pos, k_pos,
+        NumericsPolicy(mode="amsim_jnp", multiplier="fp16xbf16"),
+        causal=True, window=0)
+    out = approx_attention_fused(
+        q, k, v, q_pos, k_pos, get_lut(m), m.mantissa_bits,
+        causal=True, bq=3, bkv=8, chunk=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+def test_cross_format_attention_score_gemm_vs_numpy_staged(rng):
+    """The attention score contraction (q . k^T) itself, chunk=1,
+    against the sequential numpy staged oracle — the direct numpy leg
+    of the attention acceptance chain."""
+    from repro.kernels.approx_gemm import approx_gemm
+
+    m = get_multiplier("fp16xbf16")
+    S, dh, T = 16, 8, 16
+    q = (rng.standard_normal((S, dh)) * 0.5).astype(np.float32)
+    kt = (rng.standard_normal((dh, T)) * 0.5).astype(np.float32)
+    scores = approx_gemm(jnp.asarray(q), jnp.asarray(kt), get_lut(m),
+                         m.mantissa_bits, bm=16, bn=16, bk=8, chunk=1,
+                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(scores),
+                                  _np_staged_gemm(m.pipeline, q, kt))

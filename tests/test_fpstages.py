@@ -1,0 +1,327 @@
+"""Staged-pipeline generator (core/fpstages.py) conformance.
+
+The headline contract of the generator PR: the staged pipeline
+(denorm -> core -> normalize -> round), evaluated exhaustively, is
+*bit-identical* to the hand-written LUTs — the hand-written cores become
+regression oracles for the generator.  Plus: cross-format tables, the
+mirror law, stochastic-rounding determinism, truncated-partial-product
+cores, carry-overflow validation, and the REPRO_PIPELINE_LUT seam.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fpstages as fs
+from repro.core.amsim import amsim_multiply, np_amsim_multiply
+from repro.core.float_bits import FLOAT_FORMATS, np_bits
+from repro.core.lutgen import (_generate_lut_blackbox, generate_lut, get_lut,
+                               pack_lut)
+from repro.core.multipliers import get_multiplier
+
+# Hand-written-family -> equivalent staged spec (M=7 symmetric).
+def _classic_spec(fam: str, M: int = 7) -> fs.PipelineSpec:
+    core = fs.MulCoreStage("exact") if fam in ("bf16", "exact", "trunc") \
+        else fs.MulCoreStage(fam)
+    rnd = fs.RoundStage("rne") if fam in ("bf16", "exact") \
+        else fs.RoundStage("truncate")
+    return fs.PipelineSpec(M, M, M, core=core, round=rnd)
+
+
+HEADLINE = [  # (hand-written name, family key)
+    ("bf16", "bf16"), ("exact7", "exact"), ("trunc16", "trunc"),
+    ("mit16", "mitchell"), ("afm16", "afm"), ("realm16", "realm"),
+]
+
+
+# ----------------------------------------------------- headline bit-identity
+@pytest.mark.parametrize("name,fam", HEADLINE)
+def test_generator_reproduces_handwritten_lut_bitwise(name, fam):
+    """(ftz, exact core, RNE, M=7) == hand-written bf16/exact7 LUT, etc."""
+    hand = generate_lut(get_multiplier(name), 7)
+    gen = fs.pipeline_lut(_classic_spec(fam))
+    np.testing.assert_array_equal(hand, gen)
+
+
+@pytest.mark.parametrize("fam", ["bf16", "trunc", "mitchell", "afm", "realm"])
+@pytest.mark.parametrize("M", [3, 10])
+def test_generator_bit_identity_other_widths(fam, M):
+    hand = generate_lut(get_multiplier(f"{fam}{M}"), M)
+    np.testing.assert_array_equal(hand, fs.pipeline_lut(_classic_spec(fam, M)))
+
+
+# ------------------------------------------- staged emission == black-box Alg.1
+@pytest.mark.parametrize("spec", [
+    fs.cross_format_spec("fp16", "bf16"),
+    fs.cross_format_spec("fp16", "bf16", rounding="truncate"),
+    fs.cross_format_spec("bf16", "fp8e4m3"),
+    fs.PipelineSpec(7, 7, 7, core=fs.MulCoreStage("trunc_pp", drop_cols=5)),
+    fs.PipelineSpec(8, 8, 8, round=fs.RoundStage("stochastic", seed=3)),
+], ids=lambda s: s.name)
+def test_pipeline_lut_equals_blackbox_generation(spec):
+    """Exhaustive integer emission == probing pipeline_multiply through
+    the paper's Algorithm 1 — the REPRO_PIPELINE_LUT=0 fallback path."""
+    mult = fs.make_pipeline_multiplier(spec)
+    np.testing.assert_array_equal(
+        fs.pipeline_lut(spec), _generate_lut_blackbox(mult, spec.table_bits))
+
+
+def test_repro_pipeline_lut_switch(monkeypatch):
+    spec = fs.cross_format_spec("bf16", "fp8e5m2")
+    mult = fs.make_pipeline_multiplier(spec)
+    monkeypatch.setenv("REPRO_PIPELINE_LUT", "0")
+    off = generate_lut(mult)
+    monkeypatch.setenv("REPRO_PIPELINE_LUT", "1")
+    on = generate_lut(mult)
+    np.testing.assert_array_equal(on, off)
+
+
+# ------------------------------------------------------------- cross-format
+def test_cross_format_table_is_square_at_max_width():
+    m = get_multiplier("fp16xbf16")
+    assert m.mantissa_bits == max(FLOAT_FORMATS["fp16"], FLOAT_FORMATS["bf16"])
+    assert m.operand_bits == (10, 7)
+    lut = fs.pipeline_lut(m.pipeline)
+    assert lut.shape == (1 << 20,)
+    # out_bits = 10 keeps the table uint16-packable (kernel VMEM win).
+    assert pack_lut(lut, 10).dtype == np.uint16
+
+
+def test_cross_format_mirror_law():
+    """amsim[fa x fb](a, b) == amsim[fb x fa](b, a) — positional slots."""
+    ab = fs.pipeline_lut(get_multiplier("fp16xbf16").pipeline)
+    ba = fs.pipeline_lut(get_multiplier("bf16xfp16").pipeline)
+    n = 1 << 10
+    np.testing.assert_array_equal(ab.reshape(n, n), ba.reshape(n, n).T)
+
+
+def test_cross_format_asymmetry_is_real(rng):
+    """fp16 x bf16 is NOT commutative elementwise — the b operand loses
+    3 more mantissa bits than a."""
+    spec = get_multiplier("fp16xbf16").pipeline
+    a = (rng.standard_normal(4096) * 3).astype(np.float32)
+    b = (rng.standard_normal(4096) * 3).astype(np.float32)
+    ab = np_bits(fs.pipeline_multiply(spec, a, b))
+    ba = np_bits(fs.pipeline_multiply(spec, b, a))
+    assert np.any(ab != ba)
+
+
+def test_cross_format_embeds_asymmetric_truncation(rng):
+    """fp16xbf16 == truncate a to 10 bits, b to 7 bits, exact product,
+    RNE to 10 bits — checked against a float64 reference."""
+    from repro.core.float_bits import np_round_mantissa, np_truncate_mantissa
+
+    a = (rng.standard_normal(8192) * 5).astype(np.float32)
+    b = (rng.standard_normal(8192) * 5).astype(np.float32)
+    at = np_truncate_mantissa(a, 10).astype(np.float64)
+    bt = np_truncate_mantissa(b, 7).astype(np.float64)
+    ref = np_round_mantissa((at * bt).astype(np.float32), 10)
+    got = fs.pipeline_multiply(get_multiplier("fp16xbf16").pipeline, a, b)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_cross_format_multiplier_resolution_and_aliases():
+    m = get_multiplier("fp16xbf16")
+    assert get_multiplier("fp16xbf16") is m          # memoised
+    assert get_multiplier("fp16xbf16_rne") is m      # rne normalised away
+    mt = get_multiplier("fp16xbf16_trunc")
+    assert mt is not m and mt.pipeline.round.mode == "truncate"
+    ms = get_multiplier("fp16xbf16_sr5")
+    assert ms.pipeline.round == fs.RoundStage("stochastic", seed=5)
+
+
+# --------------------------------------------------------------- round modes
+def test_stochastic_rounding_is_deterministic_and_seeded():
+    base = fs.PipelineSpec(7, 7, 7, round=fs.RoundStage("stochastic", seed=1))
+    lut1 = fs.pipeline_lut(base)
+    lut2 = fs.pipeline_lut(
+        fs.PipelineSpec(7, 7, 7, round=fs.RoundStage("stochastic", seed=1)))
+    np.testing.assert_array_equal(lut1, lut2)  # same seed -> same table
+    other = fs.pipeline_lut(
+        fs.PipelineSpec(7, 7, 7, round=fs.RoundStage("stochastic", seed=2)))
+    assert np.any(lut1 != other)  # seed matters
+
+
+def test_stochastic_rounding_brackets_truncation():
+    """Each stochastic entry is the truncated entry or its increment
+    (dither only ever rounds up by one output ulp)."""
+    trunc = fs.pipeline_lut(
+        fs.PipelineSpec(7, 7, 7, round=fs.RoundStage("truncate")))
+    sr = fs.pipeline_lut(
+        fs.PipelineSpec(7, 7, 7, round=fs.RoundStage("stochastic", seed=9)))
+
+    def value(lut):  # (carry, top-7 mantissa) -> integer significand
+        carry = (lut >> np.uint32(23)) & 1
+        top = (lut >> np.uint32(16)) & np.uint32(0x7F)
+        # significand in units of 2^-7: (1 + top/128) * 2^carry
+        return ((128 + top) << carry).astype(np.int64)
+
+    diff = value(sr) - value(trunc)
+    assert diff.min() >= 0
+    assert diff.max() <= 2  # one ulp; 2 when the carry-1 ulp is coarser
+    assert np.any(diff > 0)
+
+
+def test_rne_matches_ieee_for_exact_core(rng):
+    """Exact core + RNE at out=7 == numpy's own f32 multiply rounded via
+    float64 (independent of the _core_exact implementation)."""
+    spec = fs.PipelineSpec(7, 7, 7)
+    a = (rng.standard_normal(4096) * 2).astype(np.float32)
+    b = (rng.standard_normal(4096) * 2).astype(np.float32)
+    got = fs.pipeline_multiply(spec, a, b)
+    ref = get_multiplier("bf16").np_mul(a, b)
+    np.testing.assert_array_equal(got, ref)
+
+
+# ------------------------------------------------------------ trunc_pp core
+def test_trunc_pp_zero_drop_is_exact():
+    exact = fs.pipeline_lut(fs.PipelineSpec(7, 7, 7))
+    tpp = fs.pipeline_lut(fs.PipelineSpec(
+        7, 7, 7, core=fs.MulCoreStage("trunc_pp", drop_cols=0)))
+    np.testing.assert_array_equal(exact, tpp)
+
+
+def test_trunc_pp_underestimates_and_compensation_helps(rng):
+    a = np.abs(rng.standard_normal(20000) * 2).astype(np.float32) + 0.5
+    b = np.abs(rng.standard_normal(20000) * 2).astype(np.float32) + 0.5
+    exact = a.astype(np.float64) * b.astype(np.float64)
+
+    def mean_rel(spec):
+        c = fs.pipeline_multiply(spec, a, b).astype(np.float64)
+        return ((c - exact) / exact).mean()
+
+    plain = mean_rel(fs.PipelineSpec(
+        7, 7, 7, core=fs.MulCoreStage("trunc_pp", drop_cols=6),
+        round=fs.RoundStage("truncate")))
+    comp = mean_rel(fs.PipelineSpec(
+        7, 7, 7, core=fs.MulCoreStage("trunc_pp", drop_cols=6,
+                                      compensate=True),
+        round=fs.RoundStage("truncate")))
+    assert plain < 0  # dropping partial products only ever underestimates
+    assert abs(comp) < abs(plain)  # expected-value compensation zero-means
+
+
+def test_trunc_pp_never_underflows_below_one():
+    """Dropped columns are a subset of the sub-unit product terms, so the
+    truncated significand product stays >= 1.0 (carry stays in {0,1})."""
+    lut = fs.pipeline_lut(fs.PipelineSpec(
+        7, 7, 7, core=fs.MulCoreStage("trunc_pp", drop_cols=7),
+        round=fs.RoundStage("truncate")))
+    assert int(lut.max()) < (1 << 24)
+
+
+# ----------------------------------------------------------------- validation
+def test_carry_overflow_is_rejected_not_silently_wrapped():
+    """AFM's saturated all-ones significand rounds up to 4.0 under RNE —
+    unrepresentable in the (carry << 23) layout; must raise, not wrap."""
+    with pytest.raises(ValueError, match="carry"):
+        fs.pipeline_lut(fs.PipelineSpec(
+            7, 7, 7, core=fs.MulCoreStage("afm"), round=fs.RoundStage("rne")))
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: fs.DenormStage("flush"),
+    lambda: fs.MulCoreStage("booth"),
+    lambda: fs.MulCoreStage("exact", drop_cols=2),
+    lambda: fs.RoundStage("nearest"),
+    lambda: fs.RoundStage("rne", seed=3),
+    lambda: fs.PipelineSpec(0, 7),
+    lambda: fs.PipelineSpec(7, 24),
+    lambda: fs.PipelineSpec(7, 7, 24),
+    lambda: fs.PipelineSpec(7, 9, core=fs.MulCoreStage("trunc_pp",
+                                                       drop_cols=8)),
+    lambda: fs.pipeline_lut(fs.PipelineSpec(23, 23)),  # table M > 12
+])
+def test_spec_validation(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+def test_spec_names_are_deterministic_and_distinct():
+    names = {
+        fs.PipelineSpec(7, 7, 7).name,
+        fs.PipelineSpec(7, 7, 7, round=fs.RoundStage("truncate")).name,
+        fs.PipelineSpec(7, 7, 7, round=fs.RoundStage("stochastic", seed=4)).name,
+        fs.PipelineSpec(10, 7, 10).name,
+        fs.PipelineSpec(7, 7, 7, denorm=fs.DenormStage("gradual")).name,
+        fs.PipelineSpec(7, 7, 7, core=fs.MulCoreStage("trunc_pp", drop_cols=3,
+                                                      compensate=True)).name,
+        fs.PipelineSpec(7, 7, 7, core=fs.MulCoreStage("mitchell"),
+                        round=fs.RoundStage("truncate")).name,
+    }
+    assert len(names) == 7
+    assert fs.PipelineSpec(7, 7, 7).name == fs.PipelineSpec(7, 7, 7).name
+    assert fs.PipelineSpec(10, 7).mirrored() == fs.PipelineSpec(7, 10, 10)
+
+
+# ------------------------------------------------- denormal contract (stages)
+def test_ftz_pipeline_matches_amsim_specials_bitwise(rng):
+    """pipeline_multiply (ftz) == LUT execution on EVERYTHING: zeros,
+    denormals, exponent extremes, the e_pre <= 0 flush boundary."""
+    spec = fs.cross_format_spec("fp16", "bf16")
+    lut = fs.pipeline_lut(spec)
+    battery = np.array([
+        0.0, -0.0, 1.0, -1.0, 1e-38, -1e-38, 3e-39, 1e-44,  # denormals too
+        np.float32(2**-126), np.float32(2**-63), 1e38, -1e38, 65504.0,
+    ], np.float32)
+    a = np.concatenate([battery, (rng.standard_normal(5000) *
+                                  np.float32(1e-20)).astype(np.float32)])
+    b = np.concatenate([battery[::-1], (rng.standard_normal(5000) *
+                                        np.float32(1e-20)).astype(np.float32)])
+    staged = fs.pipeline_multiply(spec, a[:, None], b[None, :])
+    lutted = np_amsim_multiply(a[:, None], b[None, :], lut, spec.table_bits)
+    np.testing.assert_array_equal(np_bits(staged), np_bits(lutted))
+
+
+def test_gradual_denorm_diverges_from_lut_exactly_where_documented(rng):
+    """DenormStage('gradual') handles denormal operands/results; the LUT
+    executor flushes them (AMSim Alg. 2).  On strictly-normal data with
+    normal products the two agree bitwise — the divergence is *only* the
+    denormal range."""
+    ftz = fs.PipelineSpec(7, 7, 7)
+    grad = dataclasses.replace(ftz, denorm=fs.DenormStage("gradual"))
+    a = (rng.standard_normal(4096) * 2 + 4).astype(np.float32)
+    b = (rng.standard_normal(4096) * 2 + 4).astype(np.float32)
+    np.testing.assert_array_equal(fs.pipeline_multiply(ftz, a, b),
+                                  fs.pipeline_multiply(grad, a, b))
+    den = np.float32(1e-39)  # denormal operand
+    assert fs.pipeline_multiply(ftz, den, np.float32(2.0)) == 0.0
+    got = fs.pipeline_multiply(grad, den, np.float32(2.0))
+    assert got != 0.0 and abs(float(got) / (2 * 1e-39) - 1) < 0.02
+    # denormal *result*: gradual underflows gradually, ftz flushes
+    tiny = np.float32(2**-126)
+    assert fs.pipeline_multiply(ftz, tiny, np.float32(0.5)) == 0.0
+    assert float(fs.pipeline_multiply(grad, tiny, np.float32(0.5))) == 2.0**-127
+
+
+def test_gradual_denorm_roundtrips_exact_values():
+    """Exact core, gradual, full width: denormal x exact-power products
+    reproduce IEEE results exactly."""
+    spec = fs.PipelineSpec(10, 10, 10, denorm=fs.DenormStage("gradual"))
+    # Denormals whose normalised significand fits 10 bits, times exact
+    # powers of two — IEEE-exact products the stages must reproduce.
+    a = np.array([2**-149, 1.5 * 2**-140, 1.25 * 2**-130, 2**-127], np.float32)
+    b = np.array([2.0, 4.0, 8.0, 0.5], np.float32)
+    np.testing.assert_array_equal(fs.pipeline_multiply(spec, a, b), a * b)
+
+
+# --------------------------------------------------- Multiplier integration
+def test_pipeline_multiplier_np_jnp_twins_agree(rng):
+    m = get_multiplier("fp16xbf16")
+    a = (rng.standard_normal(8192) * 10).astype(np.float32)
+    b = (rng.standard_normal(8192) * 10).astype(np.float32)
+    np.testing.assert_array_equal(
+        m.np_mul(a, b), np.asarray(m.jnp_mul(jnp.asarray(a), jnp.asarray(b))))
+
+
+def test_pipeline_lut_flows_through_get_lut_and_amsim(rng):
+    m = get_multiplier("fp16xbf16_trunc")
+    lut = get_lut(m)
+    np.testing.assert_array_equal(lut, fs.pipeline_lut(m.pipeline))
+    a = (rng.standard_normal(2048) * 4).astype(np.float32)
+    b = (rng.standard_normal(2048) * 4).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(amsim_multiply(jnp.asarray(a), jnp.asarray(b), lut,
+                                  m.mantissa_bits)),
+        fs.pipeline_multiply(m.pipeline, a, b))

@@ -1,0 +1,235 @@
+"""Property-based multiplier conformance (every family + pipelines).
+
+Algebraic laws every registered functional model and every generated
+pipeline must satisfy, probed over *raw float32 bit patterns* (the whole
+word space — denormals, exponent extremes, inf/NaN encodings included
+where the law is structural):
+
+  * commutativity (symmetric multipliers) / the mirror law (cross-format
+    pipelines: amsim[fa x fb](a, b) == amsim[fb x fa](b, a)),
+  * sign algebra: amsim(-a, b) == -amsim(a, b) bitwise,
+  * exact-zero absorption with XOR-signed zeros,
+  * saturation to +/-inf at exponent-sum overflow, flush at underflow,
+  * a per-family relative-error envelope vs the float64 reference.
+
+Hypothesis drives the search when installed (requirements-dev); the
+deterministic seeded twins below cover the same laws in bare CI,
+matching the repo's hypothesis-guarded pattern.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.float_bits import EXP_MASK, SIGN_MASK, np_bits, np_float
+from repro.core.multipliers import get_multiplier
+
+# Commutative models: the hand-written zoo + symmetric generated
+# pipelines with operand-order-independent rounding.  (A *stochastic*
+# pipeline is symmetric in formats but NOT commutative: the dither hash
+# is positional — fp16xfp16_sr3 lives in ALL_NAMES for the other laws.)
+SYMMETRIC = ["bf16", "trunc16", "afm16", "mit16", "realm16", "exact7"]
+# Cross-format (positional) pipelines, as (name, mirrored-name).
+CROSS = [("fp16xbf16", "bf16xfp16"), ("fp16xbf16_trunc", "bf16xfp16_trunc")]
+ALL_NAMES = SYMMETRIC + ["fp16xfp16_sr3"] + [n for pair in CROSS for n in pair]
+
+# Relative-error envelope vs the float64 exact product, for normal
+# operands with normal products.  Exact-family at M=7: two 2^-7 operand
+# truncations + 2^-8 product rounding ~ 1.97% max.  Cross fp16 x bf16:
+# 2^-10 + 2^-7 + 2^-11 ~ 0.93%.  Log families: Mitchell's antilog
+# under-estimate peaks at ~11.1%; AFM/REALM shift/shrink it but stay in
+# the same octave-free band.
+ENVELOPE = {
+    "bf16": 0.025, "trunc16": 0.025, "exact7": 0.025,
+    "afm16": 0.15, "mit16": 0.15, "realm16": 0.15,
+    "fp16xbf16": 0.015, "bf16xfp16": 0.015,
+    "fp16xbf16_trunc": 0.015, "bf16xfp16_trunc": 0.015,
+    "fp16xfp16_sr3": 0.015,
+}
+
+_EDGE_BITS = np.array([
+    0x00000000, 0x80000000,              # +/- zero
+    0x00000001, 0x80000001,              # min denormals
+    0x007FFFFF,                          # max denormal
+    0x00800000, 0x80800000,              # min normals
+    0x3F800000, 0xBF800000,              # +/- 1.0
+    0x3FFFFFFF,                          # 1.9999999
+    0x7F7FFFFF, 0xFF7FFFFF,              # +/- max finite
+    0x7F800000, 0xFF800000,              # +/- inf encodings
+    0x00FF0000, 0x1E3A5F00, 0x5EDEAD00,  # assorted magnitudes
+], dtype=np.uint32)
+
+
+def _bit_battery(rng, n=300):
+    return np.concatenate(
+        [_EDGE_BITS, rng.integers(0, 1 << 32, n, dtype=np.uint64)
+         .astype(np.uint32)])
+
+
+def _is_nanish(u):  # exp=255, mantissa != 0 — excluded from value laws
+    return ((u & EXP_MASK) == EXP_MASK) & ((u & ~(SIGN_MASK | EXP_MASK)) != 0)
+
+
+# ---------------------------------------------------------------- the laws
+def check_sign_algebra(name, ua, ub):
+    """amsim(-a, b) == -amsim(a, b), bitwise on the uint32 word."""
+    m = get_multiplier(name)
+    ua, ub = np.uint32(ua), np.uint32(ub)
+    base = np_bits(m.np_mul(np_float(ua), np_float(ub)))
+    flip_a = np_bits(m.np_mul(np_float(ua ^ SIGN_MASK), np_float(ub)))
+    flip_b = np_bits(m.np_mul(np_float(ua), np_float(ub ^ SIGN_MASK)))
+    assert flip_a == (base ^ SIGN_MASK)
+    assert flip_b == (base ^ SIGN_MASK)
+
+
+def check_commutativity(name, ua, ub):
+    m = get_multiplier(name)
+    ab = np_bits(m.np_mul(np_float(np.uint32(ua)), np_float(np.uint32(ub))))
+    ba = np_bits(m.np_mul(np_float(np.uint32(ub)), np_float(np.uint32(ua))))
+    assert ab == ba
+
+
+def check_mirror_law(name, mirror_name, ua, ub):
+    ab = np_bits(get_multiplier(name).np_mul(
+        np_float(np.uint32(ua)), np_float(np.uint32(ub))))
+    ba = np_bits(get_multiplier(mirror_name).np_mul(
+        np_float(np.uint32(ub)), np_float(np.uint32(ua))))
+    assert ab == ba
+
+
+def check_zero_absorption(name, ub):
+    m = get_multiplier(name)
+    b = np_float(np.uint32(ub))
+    sb = np.uint32(ub) >> np.uint32(31)
+    for sa in (np.uint32(0), SIGN_MASK):
+        out = np_bits(m.np_mul(np_float(sa), b))
+        assert out == ((sa >> np.uint32(31)) ^ sb) << np.uint32(31), \
+            f"{name}: 0 * {b!r} -> {out:#x}"
+
+
+def check_saturation(name, ua, ub):
+    """Exponent-sum extremes: overflow -> +/-inf, deep underflow -> 0."""
+    m = get_multiplier(name)
+    ua, ub = np.uint32(ua), np.uint32(ub)
+    if _is_nanish(ua) or _is_nanish(ub):
+        return
+    ea = int((ua & EXP_MASK) >> np.uint32(23))
+    eb = int((ub & EXP_MASK) >> np.uint32(23))
+    out = np_bits(m.np_mul(np_float(ua), np_float(ub)))
+    sign = (ua ^ ub) & SIGN_MASK
+    if ea == 0 or eb == 0 or ea + eb < 127:  # zero/denormal/deep underflow
+        assert out == sign, f"{name}: expected flush, got {out:#x}"
+    elif ea + eb >= 255 + 127 + 1:  # overflow even without carry
+        assert out == (sign | np.uint32(0x7F80_0000)), \
+            f"{name}: expected inf, got {out:#x}"
+
+
+def check_error_envelope(name, ua, ub):
+    m = get_multiplier(name)
+    ua, ub = np.uint32(ua), np.uint32(ub)
+    ea = int((ua & EXP_MASK) >> np.uint32(23))
+    eb = int((ub & EXP_MASK) >> np.uint32(23))
+    # Normal operands whose product exponent is comfortably in range
+    # (carry/flush corners are covered by check_saturation + the grid
+    # conformance suite).
+    if not (2 <= ea <= 253 and 2 <= eb <= 253 and 64 <= ea + eb - 127 <= 190):
+        return
+    a, b = np_float(ua), np_float(ub)
+    exact = np.float64(a) * np.float64(b)
+    got = np.float64(m.np_mul(a, b))
+    assert abs(got / exact - 1.0) <= ENVELOPE[name], \
+        f"{name}: {a!r} * {b!r} -> rel err {got / exact - 1.0:.4f}"
+
+
+# --------------------------------------------------------- hypothesis drivers
+if HAVE_HYPOTHESIS:
+    bits = st.integers(min_value=0, max_value=(1 << 32) - 1)
+
+    @given(bits, bits, st.sampled_from(ALL_NAMES))
+    @settings(max_examples=200, deadline=None)
+    def test_sign_algebra_property(ua, ub, name):
+        check_sign_algebra(name, ua, ub)
+
+    @given(bits, bits, st.sampled_from(SYMMETRIC))
+    @settings(max_examples=200, deadline=None)
+    def test_commutativity_property(ua, ub, name):
+        check_commutativity(name, ua, ub)
+
+    @given(bits, bits, st.sampled_from(CROSS))
+    @settings(max_examples=200, deadline=None)
+    def test_mirror_law_property(ua, ub, pair):
+        check_mirror_law(pair[0], pair[1], ua, ub)
+
+    @given(bits, st.sampled_from(ALL_NAMES))
+    @settings(max_examples=100, deadline=None)
+    def test_zero_absorption_property(ub, name):
+        check_zero_absorption(name, ub)
+
+    @given(bits, bits, st.sampled_from(ALL_NAMES))
+    @settings(max_examples=200, deadline=None)
+    def test_saturation_property(ua, ub, name):
+        check_saturation(name, ua, ub)
+
+    @given(bits, bits, st.sampled_from(ALL_NAMES))
+    @settings(max_examples=300, deadline=None)
+    def test_error_envelope_property(ua, ub, name):
+        check_error_envelope(name, ua, ub)
+
+
+# ------------------------------------------------------- deterministic twins
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_sign_algebra_deterministic(name, rng):
+    battery = _bit_battery(rng, 60)
+    for ua in battery[::3]:
+        for ub in battery[::5]:
+            check_sign_algebra(name, ua, ub)
+
+
+@pytest.mark.parametrize("name", SYMMETRIC)
+def test_commutativity_deterministic(name, rng):
+    battery = _bit_battery(rng, 60)
+    for ua in battery[::3]:
+        for ub in battery[::5]:
+            check_commutativity(name, ua, ub)
+
+
+@pytest.mark.parametrize("pair", CROSS, ids=lambda p: p[0])
+def test_mirror_law_deterministic(pair, rng):
+    battery = _bit_battery(rng, 60)
+    for ua in battery[::3]:
+        for ub in battery[::5]:
+            check_mirror_law(pair[0], pair[1], ua, ub)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_zero_absorption_deterministic(name, rng):
+    for ub in _bit_battery(rng, 100):
+        check_zero_absorption(name, ub)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_saturation_deterministic(name, rng):
+    battery = _bit_battery(rng, 60)
+    for ua in battery[::3]:
+        for ub in battery[::5]:
+            check_saturation(name, ua, ub)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_error_envelope_deterministic(name, rng):
+    battery = _bit_battery(rng, 200)
+    for ua in battery[::4]:
+        for ub in battery[::7]:
+            check_error_envelope(name, ua, ub)
+    # Plus a dense sweep in the comfortable range.
+    a = (rng.standard_normal(3000) * 8).astype(np.float32)
+    b = (rng.standard_normal(3000) * 8).astype(np.float32)
+    m = get_multiplier(name)
+    exact = a.astype(np.float64) * b.astype(np.float64)
+    got = np.float64(m.np_mul(a, b))
+    ok = exact != 0
+    assert np.all(np.abs(got[ok] / exact[ok] - 1.0) <= ENVELOPE[name])

@@ -170,3 +170,83 @@ def test_mean_error_ranking(rng):
     assert abs(afm_mean) < abs(mit_mean)
     assert abs(realm_mean) < abs(mit_mean)
     assert realm_abs < mit_abs  # piecewise correction also cuts |error|
+
+
+# --------------------------------------------------- denormal FTZ contract
+_DENORM_IN = np.array([
+    1e-40, -1e-40,                 # mid-range denormals
+    np.float32(2**-149),           # min positive denormal
+    -np.float32(2**-149),
+    np.float32(2**-126) - np.float32(2**-149),  # max denormal
+    0.0, -0.0,
+], np.float32)
+
+
+@pytest.mark.parametrize("name", FAMILIES16 + ["exact7"])
+def test_denormal_inputs_flush_to_zero(name):
+    """FTZ contract, pinned: a denormal *operand* behaves as signed zero
+    in all three executions (functional model, jnp twin, LUT).  The
+    staged generator's gradual mode is the documented exception and is
+    tested in test_fpstages."""
+    m = get_multiplier(name)
+    b = np.full_like(_DENORM_IN, 3.0)
+    for mul in (m.np_mul,
+                lambda x, y: np.asarray(
+                    m.jnp_mul(jnp.asarray(x), jnp.asarray(y)))):
+        for out in (mul(_DENORM_IN, b), mul(b, _DENORM_IN)):
+            assert np.all(out == 0.0), f"{name}: {out}"
+    lut_out = np_amsim_multiply(_DENORM_IN, b, get_lut(m), m.mantissa_bits)
+    assert np.all(lut_out == 0.0)
+
+
+@pytest.mark.parametrize("name", FAMILIES16 + ["exact7"])
+def test_denormal_outputs_flush_to_zero(name):
+    """Products that underflow below the min normal flush to signed
+    zero — never a denormal word — in model, jnp twin and LUT alike.
+    (The jnp twin of the exact family previously leaked gradual
+    underflow through native fp32 multiply; this pins the fix.)"""
+    m = get_multiplier(name)
+    a = np.array([2**-100, -(2**-100), 1.5 * 2**-63, 2**-126], np.float32)
+    b = np.array([2**-30, 2**-40, 2**-64, 0.5], np.float32)
+    np_out = m.np_mul(a, b)
+    jnp_out = np.asarray(m.jnp_mul(jnp.asarray(a), jnp.asarray(b)))
+    lut_out = np_amsim_multiply(a, b, get_lut(m), m.mantissa_bits)
+    for out in (np_out, jnp_out, lut_out):
+        assert np.all(out == 0.0), f"{name}: {out}"
+        assert np.all((np_bits(out) & np.uint32(0x7FFFFFFF)) == 0)
+    # signs survive the flush in the LUT path (XOR rule)
+    assert np.signbit(lut_out[1])
+
+
+@pytest.mark.parametrize("name", FAMILIES16)
+def test_min_normal_boundary_survives(name, rng):
+    """Just-above-threshold products stay normal (no over-eager flush):
+    model == LUT bitwise and nonzero where the exponent math keeps
+    e_pre >= 1."""
+    m = get_multiplier(name)
+    a = np.float32(2**-60) * (1 + rng.random(64, np.float32))
+    b = np.float32(2**-60) * (1 + rng.random(64, np.float32))
+    # products in [2^-120, 2^-118): e_pre in [7, 10] -> always normal
+    np_out = m.np_mul(a, b)
+    lut_out = np_amsim_multiply(a, b, get_lut(m), m.mantissa_bits)
+    np.testing.assert_array_equal(np_bits(np_out), np_bits(lut_out))
+    assert np.all(np_out != 0.0)
+
+
+# ------------------------------------------------------- registry ergonomics
+def test_unknown_multiplier_error_lists_names_and_suggests():
+    with pytest.raises(ValueError) as ei:
+        get_multiplier("mitchel7")
+    msg = str(ei.value)
+    assert "mitchel7" in msg
+    assert "bf16" in msg and "afm16" in msg      # known names listed
+    assert "Did you mean" in msg
+    assert "mitchell7" in msg or "mit16" in msg  # the suggestion itself
+
+
+def test_unknown_cross_format_error_mentions_grammar():
+    with pytest.raises(ValueError) as ei:
+        get_multiplier("fp16xbf17")
+    msg = str(ei.value)
+    assert "<fmt>x<fmt>" in msg
+    assert "fp16" in msg and "bf16" in msg

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Golden LUT-digest check: regenerate tables, compare CRC32s (CI lane).
+
+The staged-pipeline generator (core/fpstages.py) is the authoritative
+definition of every multiplier LUT; ``tests/golden/lut_digests.json``
+pins a CRC32 of each canonical table's bytes so *silent* LUT drift —
+a lutgen refactor, an fpstages edit, a changed rounding constant —
+fails loudly in CI even when every relative test still passes.
+
+    python tools/check_golden.py            # compare, exit 1 on drift
+    python tools/check_golden.py --update   # rewrite the golden file
+
+The same digests are asserted by tests/test_conformance.py in tier-1;
+this standalone tool is the cheap regeneration run in the bench-kernels
+lane (and the only way to *bless* intentional changes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import zlib
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+
+GOLDEN_PATH = _ROOT / "tests" / "golden" / "lut_digests.json"
+
+# (multiplier name, table M) — the canonical tables worth pinning: the
+# hand-written zoo at its published width plus the cross-format
+# pipelines the benchmarks/tests exercise.
+GOLDEN_TABLES = [
+    ("bf16", 7), ("exact7", 7), ("trunc16", 7),
+    ("mit16", 7), ("afm16", 7), ("realm16", 7),
+    ("fp16xbf16", 10), ("fp16xbf16_trunc", 10), ("bf16xfp16", 10),
+]
+
+
+def compute_digests() -> dict[str, str]:
+    from repro.core.lutgen import generate_lut
+    from repro.core.multipliers import get_multiplier
+
+    out = {}
+    for name, m in GOLDEN_TABLES:
+        lut = generate_lut(get_multiplier(name), m)
+        out[f"{name}@M{m}"] = f"{zlib.crc32(lut.tobytes()) & 0xFFFFFFFF:08x}"
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="bless the current tables (rewrite the golden file)")
+    args = ap.parse_args(argv)
+    fresh = compute_digests()
+    if args.update:
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(json.dumps(fresh, indent=2, sort_keys=True)
+                               + "\n")
+        print(f"wrote {len(fresh)} digests -> {GOLDEN_PATH}")
+        return 0
+    if not GOLDEN_PATH.exists():
+        print(f"missing golden file {GOLDEN_PATH}; run with --update")
+        return 1
+    golden = json.loads(GOLDEN_PATH.read_text())
+    failures = []
+    for key, want in sorted(golden.items()):
+        got = fresh.get(key)
+        if got != want:
+            failures.append(f"{key}: golden {want} != regenerated {got}")
+    for key in sorted(set(fresh) - set(golden)):
+        failures.append(f"{key}: generated but missing from golden file")
+    for line in failures:
+        print(line)
+    if failures:
+        print(f"\n{len(failures)} LUT digest mismatch(es); if intentional, "
+              "bless with: python tools/check_golden.py --update")
+        return 1
+    print(f"all {len(golden)} LUT digests match")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
