@@ -11,6 +11,13 @@ true decode row count where the per-op 2-D engine pads rows to a
 Rows:
   decode_chain_fused_step        informational: fused-chain step wall time
   decode_chain_perop_step        informational: per-op step wall time
+  decode_chain_moe_fused_step    informational: same, MoE arch
+                                 (granite-moe, wo->norm launch + stacked
+                                 expert-bank launch)
+  decode_chain_moe_perop_step    informational: MoE per-op step wall time
+  decode_chain_moe_vs_per_op_speedup
+                                 **gated**: MoE fused/per-op ratio, same
+                                 contract as the dense row below
   decode_chain_vs_per_op_speedup **gated**: fused/per-op wall-time ratio
                                  (lower is better; both sides run on the
                                  same box so runner speed cancels).  The
@@ -76,8 +83,11 @@ def _timed_steps(step, params, nxt0, caches0, n_steps: int) -> float:
     return best / n_steps
 
 
-def main(smoke: bool = False) -> None:
-    cfg = reduced(get_arch("granite-3-2b"), n_layers=1)
+def _chain_vs_perop(cfg, smoke: bool) -> tuple[float, float]:
+    """(fused, per-op) per-step wall times for one arch through
+    make_serve_step, from one shared post-prefill cache state.  Asserts
+    chain engagement on the fused side and silence on the kill-switch
+    side."""
     pol = NumericsPolicy(mode="amsim", multiplier="exact7")
     params = init_lm(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (_B, _PLEN), 1,
@@ -109,13 +119,30 @@ def main(smoke: bool = False) -> None:
             os.environ.pop("REPRO_DECODE_FUSED", None)
         else:
             os.environ["REPRO_DECODE_FUSED"] = prev
+    return t_fused, t_perop
 
+
+def main(smoke: bool = False) -> None:
+    t_fused, t_perop = _chain_vs_perop(
+        reduced(get_arch("granite-3-2b"), n_layers=1), smoke)
     emit("decode_chain_fused_step", t_fused,
          f"{t_fused * 1e3:.2f}ms_per_step")
     emit("decode_chain_perop_step", t_perop,
          f"{t_perop * 1e3:.2f}ms_per_step")
     ratio = t_fused / t_perop
     emit("decode_chain_vs_per_op_speedup", 0.0,
+         f"{1 / ratio:.2f}x_fused_over_per_op",
+         norm=max(ratio, _CLAMP), gate=True)
+
+    # MoE: the wo->norm launch + stacked expert-bank launch back half.
+    t_fused, t_perop = _chain_vs_perop(
+        reduced(get_arch("granite-moe-3b-a800m"), n_layers=1), smoke)
+    emit("decode_chain_moe_fused_step", t_fused,
+         f"{t_fused * 1e3:.2f}ms_per_step")
+    emit("decode_chain_moe_perop_step", t_perop,
+         f"{t_perop * 1e3:.2f}ms_per_step")
+    ratio = t_fused / t_perop
+    emit("decode_chain_moe_vs_per_op_speedup", 0.0,
          f"{1 / ratio:.2f}x_fused_over_per_op",
          norm=max(ratio, _CLAMP), gate=True)
 

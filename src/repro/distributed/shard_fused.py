@@ -265,14 +265,17 @@ def _overlap_setting(n: int):
       * integer N — chunk N ways (falls back to 1 when N doesn't divide
         n; the ``decode_chain`` autotune namespace's ``overlap`` knob is
         applied by exporting its winner here).
-      * ``ring`` — ppermute-pipelined reduce-scatter + all-gather.
+      * ``ring`` — ppermute-pipelined all-reduce in fixed shard-index
+        order (bitwise-deterministic; see ``_ring_psum``).
 
     Chunked mode splits w's OUTPUT columns, so every output element's
     model-axis sum is computed exactly as before — bit-identical to the
     single psum as long as both column widths resolve to the same GEMM
     fold (always true under the default/hermetic autotune cache; a
     tuned cache that splits the n buckets may reassociate).  Ring mode
-    reassociates the cross-device sum by construction (allclose only).
+    accumulates the cross-device sum in fixed shard-index order —
+    bitwise-deterministic, and bitwise-equal to the single psum on a
+    two-device model axis (FP add is commutative).
     """
     raw = os.environ.get("REPRO_OVERLAP_PSUM", "auto").strip().lower()
     if raw == "ring":
@@ -287,37 +290,37 @@ def _overlap_setting(n: int):
 
 
 def _ring_psum(part, D: int, axis_name: str = "model"):
-    """ppermute-pipelined all-reduce of ``part`` (..., m, n) over the
-    mesh axis: reduce-scatter (D-1 steps) then all-gather (D-1 steps)
-    on n-chunks, so at every step all devices stream one chunk over the
-    ring while the next chunk's add is free to overlap.  Reassociates
-    the FP32 sum (allclose-level vs psum, not bitwise) — opt-in via
-    REPRO_OVERLAP_PSUM=ring."""
-    n = part.shape[-1]
-    if D <= 1 or n % D:
-        return jax.lax.psum(part, axis_name)
+    """ppermute-pipelined all-reduce of ``part`` over the mesh axis in
+    **fixed shard-index order**: the partial sums are accumulated
+    0 + 1 + ... + (D-1) regardless of which device computes, so the
+    result is bitwise-deterministic across runs, topologies and XLA
+    collective schedules — the property REPRO_OVERLAP_PSUM=ring buys.
+    (On a two-device axis the order coincides with any psum order up to
+    FP-add commutativity, so ring is additionally bitwise against the
+    single-psum baseline there; tests/test_shard_fused.py asserts it.)
+
+    Reduce leg (D-1 hops): the accumulator walks the ring forward and
+    each device folds its shard in AT ITS INDEX TURN via a select — no
+    arithmetic happens on non-adding devices, so there is no -0.0 or
+    rounding hazard from dummy adds.  Broadcast leg (D-1 hops): device
+    D-1's finished sum walks the same ring.  Each hop streams the whole
+    tensor (more wire bytes than a reduce-scatter ring), but every hop
+    still overlaps the next block's compute; determinism, not minimal
+    bandwidth, is this mode's contract (docs/configuration.md)."""
+    if D <= 1:
+        return part
     idx = jax.lax.axis_index(axis_name)
-    stack = jnp.stack(jnp.split(part, D, axis=-1))       # (D, ..., n/D)
-    # reduce-scatter: device d starts on chunk (d+1)%D, receives from
-    # d+1 each step and adds its local chunk (d+1+s)%D — after D-1
-    # steps device d owns fully-reduced chunk d.
-    back = [(i, (i - 1) % D) for i in range(D)]
-    acc = jax.lax.dynamic_index_in_dim(stack, (idx + 1) % D, 0,
-                                       keepdims=False)
-    for s in range(1, D):
-        acc = jax.lax.ppermute(acc, axis_name, back)
-        acc = acc + jax.lax.dynamic_index_in_dim(stack, (idx + 1 + s) % D,
-                                                 0, keepdims=False)
-    # all-gather: pass the newest reduced chunk forward; device d
-    # receives chunk (d-s)%D at step s.
     fwd = [(i, (i + 1) % D) for i in range(D)]
-    out = jnp.zeros_like(stack)
-    out = jax.lax.dynamic_update_index_in_dim(out, acc, idx, 0)
+    acc = jnp.where(idx == 0, part, jnp.zeros_like(part))
+    for s in range(1, D):
+        acc = jax.lax.ppermute(acc, axis_name, fwd)
+        acc = jnp.where(idx == s, acc + part, acc)
+    # device D-1 now holds sum(part[0..D-1]) in shard-index order
     buf = acc
     for s in range(1, D):
         buf = jax.lax.ppermute(buf, axis_name, fwd)
-        out = jax.lax.dynamic_update_index_in_dim(out, buf, (idx - s) % D, 0)
-    return jnp.concatenate([out[i] for i in range(D)], axis=-1)
+        acc = jnp.where(idx == (D - 1 + s) % D, buf, acc)
+    return acc
 
 
 def _row_fwd(x, w, policy, mesh, site=None):

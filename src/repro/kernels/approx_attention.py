@@ -79,9 +79,18 @@ MAX_BQ = 256             # largest q tile any cached config may pick
 MAX_BKV = 256            # largest kv tile any cached config may pick
 MAX_DH = 256             # score-GEMM depth bound
 
+# Incremented once per *trace* of the fused wrapper (never per step):
+# tests assert the fused core engages on paged serving decode ticks.
+_TRACES = [0]
+
+
+def trace_count() -> int:
+    return _TRACES[0]
+
 
 def attention_fused_supported(q_shape, k_shape, *, causal: bool = True,
-                              window: int = 0) -> bool:
+                              window: int = 0,
+                              per_row: bool = False) -> bool:
     """Whether the fused kernel can take this attention shape (VMEM
     guard on the per-grid-cell resident arrays: K/V of one batch*kv-head,
     the (bq*G, Tp) score scratch, q/out tiles) — callers fall back to
@@ -90,13 +99,16 @@ def attention_fused_supported(q_shape, k_shape, *, causal: bool = True,
     MAX_BQ/MAX_BKV caps the wrapper clamps cached configs to.  Under a
     causal sliding window the wrapper compacts the KV axis to the static
     ``window + S`` live budget first, so a huge ring-buffer capacity
-    does not disqualify windowed decode.
+    does not disqualify windowed decode.  ``per_row`` positions (the
+    paged serving cache: every batch row at its own decode offset)
+    disable that compaction — there is no single shared live set — so
+    the bound is taken on the full KV extent.
     """
     B, S, H, dh = q_shape
     T, KV = k_shape[1], k_shape[2]
     if H % KV or dh > MAX_DH or S < 1 or T < 1:
         return False
-    if causal and window:
+    if causal and window and not per_row:
         T = min(T, window + S)  # wrapper's window compaction
     rows = min(MAX_BQ, S) * (H // KV)
     tp = T + MAX_BKV  # worst-case block padding
@@ -134,8 +146,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, live_ref, lut_ref, o_ref,
     q = q_ref[0].reshape(rows, dh)
     k = k_ref[0]
     v = v_ref[0]
-    mask = mask_ref[...]
-    live = live_ref[0]
+    mask = mask_ref[0]
+    live = live_ref[0, 0]
     lut = lut_ref[...]
 
     # ---- pass 1: masked score tiles -> VMEM scratch (NEG_INF elsewhere)
@@ -226,8 +238,9 @@ def _attn_impl(q, k, v, q_pos, k_pos, lut, M, *, causal, window, bq, bkv,
     # exceed the budget and silently truncate, hence the static
     # ``contiguous_q`` gate (contiguity is a trace-time contract the
     # caller asserts — it cannot be checked on traced positions).
+    per_row = q_pos.ndim == 2
     T_budget = _ceil_to(min(window + S, T), bkv) \
-        if (causal and window and contiguous_q) else T
+        if (causal and window and contiguous_q and not per_row) else T
     if T_budget < T:
         live_slot = (k_pos >= 0) & (k_pos > jnp.min(q_pos) - window) \
             & (k_pos <= jnp.max(q_pos))
@@ -244,21 +257,32 @@ def _attn_impl(q, k, v, q_pos, k_pos, lut, M, *, causal, window, bq, bkv,
     vt = _pad_to(vt, bkv, 1)
     # Padded positions take the "unwritten" sentinel so padded K slots
     # are masked and padded q rows never force a KV block live.
-    qp = jnp.pad(q_pos.astype(jnp.int32), (0, Sp - S),
-                 constant_values=POS_PAD)
-    kp = jnp.pad(k_pos.astype(jnp.int32), (0, Tp - T),
-                 constant_values=POS_PAD)
+    pad_q = [(0, 0)] * (q_pos.ndim - 1) + [(0, Sp - S)]
+    pad_k = [(0, 0)] * (k_pos.ndim - 1) + [(0, Tp - T)]
+    qp = jnp.pad(q_pos.astype(jnp.int32), pad_q, constant_values=POS_PAD)
+    kp = jnp.pad(k_pos.astype(jnp.int32), pad_k, constant_values=POS_PAD)
     # THE shared mask (kernels/common.attention_mask — one definition
-    # for every lowering), computed vectorised ONCE per call (it is
-    # identical for every batch*kv-head grid row), AND-ed with the
-    # padded-q-row validity term (negative q_pos sentinel) so pad rows
-    # can never force a KV block live, together with the
-    # per-(q-block, KV-block) liveness flags that let the kernel skip
-    # fully-masked blocks.
-    mask = attention_mask(qp, kp, causal=causal, window=window) \
-        & (qp >= 0)[:, None]
+    # for every lowering), AND-ed with the padded-q-row validity term
+    # (negative q_pos sentinel) so pad rows can never force a KV block
+    # live, together with the per-(q-block, KV-block) liveness flags
+    # that let the kernel skip fully-masked blocks.  Shared (1-D)
+    # positions give ONE (Sp, Tp) mask reused by every batch*kv-head
+    # grid row; per-row (2-D, the paged serving cache) positions give a
+    # per-batch mask the grid indexes by ``bh // KV``.  Either way the
+    # kernel sees a leading size-1 block axis.
     nq, nkv = Sp // bq, Tp // bkv
-    blk_live = jnp.any(mask.reshape(nq, bq, nkv, bkv), axis=(1, 3))
+    if per_row:
+        mask = attention_mask(qp, kp, causal=causal, window=window) \
+            & (qp >= 0)[..., :, None]                     # (B, Sp, Tp)
+        blk_live = jnp.any(mask.reshape(B, nq, bq, nkv, bkv),
+                           axis=(2, 4))                   # (B, nq, nkv)
+        mrow = lambda bh: bh // KV                        # noqa: E731
+    else:
+        mask = (attention_mask(qp, kp, causal=causal, window=window)
+                & (qp >= 0)[:, None])[None]               # (1, Sp, Tp)
+        blk_live = jnp.any(mask[0].reshape(nq, bq, nkv, bkv),
+                           axis=(1, 3))[None]             # (1, nq, nkv)
+        mrow = lambda bh: 0                               # noqa: E731
     packed = lut.dtype == jnp.uint16
     grid = (BH, nq)
     out = pl.pallas_call(
@@ -272,8 +296,8 @@ def _attn_impl(q, k, v, q_pos, k_pos, lut, M, *, causal, window, bq, bkv,
             # batch*kv-head; the LUT is broadcast across the whole grid.
             pl.BlockSpec((1, Tp, dh), lambda bh, iq: (bh, 0, 0)),
             pl.BlockSpec((1, Tp, dh), lambda bh, iq: (bh, 0, 0)),
-            pl.BlockSpec((bq, Tp), lambda bh, iq: (iq, 0)),
-            pl.BlockSpec((1, nkv), lambda bh, iq: (iq, 0)),
+            pl.BlockSpec((1, bq, Tp), lambda bh, iq: (mrow(bh), iq, 0)),
+            pl.BlockSpec((1, 1, nkv), lambda bh, iq: (mrow(bh), iq, 0)),
             pl.BlockSpec((lut.shape[0],), lambda bh, iq: (0,)),
         ],
         out_specs=pl.BlockSpec((1, bq, G, dh),
@@ -311,7 +335,12 @@ def approx_attention_fused(
 
     q (B, S, H, dh), k/v (B, T, KV, dh) with H = KV * G, q_pos (S,) and
     k_pos (T,) absolute positions (negative k_pos = unwritten ring slot,
-    masked) -> (B, S, H, dh), FP32 accumulate.  Semantics match
+    masked) -> (B, S, H, dh), FP32 accumulate.  Positions may instead be
+    per-row — q_pos (B, S) and k_pos (B, T), the paged serving cache's
+    slot-granular layout where every batch row decodes at its own
+    offset — in which case the mask/liveness operands grow a leading
+    batch axis and the window-compaction fast path is disabled (there
+    is no single shared live set to gather).  Semantics match
     ``ops.attend_einsum``: scores scaled by 1/sqrt(dh), causal /
     sliding-``window`` / position masks, softmax over keys, both
     contractions through the multiplier LUT (canonical uint32 or packed
@@ -332,8 +361,10 @@ def approx_attention_fused(
     T, KV = k.shape[1], k.shape[2]
     assert k.shape == v.shape and k.shape[0] == B, (q.shape, k.shape, v.shape)
     assert H % KV == 0, (H, KV)
-    assert q_pos.shape == (S,) and k_pos.shape == (T,), \
+    assert q_pos.shape in ((S,), (B, S)) \
+        and k_pos.shape == q_pos.shape[:-1] + (T,), \
         (q_pos.shape, k_pos.shape, q.shape, k.shape)
+    _TRACES[0] += 1
     lut = jnp.asarray(lut)
     lut = lut if lut.dtype == jnp.uint16 else lut.astype(jnp.uint32)
     if interpret is None:

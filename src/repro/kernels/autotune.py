@@ -538,9 +538,13 @@ def autotune_decode_chain(x, attn, g1, g2, wq, wk, wv, wo, wg, wu, wd,
     (rows, H*dh) attention output, weights shaped as in a dense block.
     The ``overlap`` knob is not timed here (it only matters under a
     mesh); candidates carry it through so a sweep can seed it.
-    Candidates that fail to lower are skipped; if every candidate fails
-    DEFAULT_DECODE_CHAIN is returned untouched.
+    Candidates whose streamed blocks overrun the VMEM budget model
+    (kernels/vmem.py) are pruned before timing — the tuner never times
+    a config the dispatch guard would refuse.  Candidates that fail to
+    lower are skipped; if every candidate fails DEFAULT_DECODE_CHAIN is
+    returned untouched.
     """
+    from repro.kernels import vmem  # lazy: vmem imports this module
     from repro.kernels.decode_chain import fused_out_mlp, fused_qkv_norm
 
     if candidates is None:
@@ -548,6 +552,10 @@ def autotune_decode_chain(x, attn, g1, g2, wq, wk, wv, wo, wg, wu, wd,
     rows, d = x.shape
     k_attn = attn.shape[1]
     d_ff = wg.shape[1]
+    candidates = vmem.filter_candidates(
+        [(c.bn, c.bko, c.bf, c.overlap) for c in candidates],
+        rows, d, k_attn, d_ff, M, mult=mult)
+    candidates = [DecodeChainConfig(*c) for c in candidates]
 
     def run(cfg):
         q, kk, vv = fused_qkv_norm(x, g1, wq, wk, wv, lut, M, eps=eps,

@@ -508,18 +508,21 @@ def attention_fused_leaf(policy: Numerics) -> NumericsPolicy | None:
 
 
 def fused_attention_enabled(policy: Numerics, q_shape, k_shape, *,
-                            causal: bool = True, window: int = 0) -> bool:
+                            causal: bool = True, window: int = 0,
+                            per_row: bool = False) -> bool:
     """Dispatch guard for the one-launch kernel: both attention sites
     must resolve to the same amsim leaf, killable via
     REPRO_ATTN_FUSED=0, and the shape must pass the VMEM bounds
-    (window-compacted under a causal sliding window)."""
+    (window-compacted under a causal sliding window; ``per_row``
+    positions — the paged serving cache — disable that compaction, so
+    the bound is taken on the full KV extent)."""
     leaf = attention_fused_leaf(policy)
     if leaf is None or leaf.mode != "amsim" or leaf.is_native:
         return False
     if os.environ.get("REPRO_ATTN_FUSED", "1").lower() in ("0", "false"):
         return False
     return attention_fused_supported(q_shape, k_shape, causal=causal,
-                                     window=window)
+                                     window=window, per_row=per_row)
 
 
 def _attention_fwd_impl(q, k, v, q_pos, k_pos, policy, causal, window):
@@ -577,9 +580,13 @@ def _pattn_bwd(policy, causal, window, res, g):
     # non-multiple S (e.g. 1536 with target 1024 -> 768) keeps the
     # memory bound instead of silently recomputing unchunked; only a
     # degenerate divisor structure (prime-ish S, where chunking would
-    # mean per-row maps) falls back to the one-shot recompute.
+    # mean per-row maps) falls back to the one-shot recompute.  Per-row
+    # (B, S) positions — the paged serving cache — skip the chunking
+    # (its reshape assumes one shared position vector); paged calls are
+    # short decode/prefill segments, so the one-shot recompute stays
+    # memory-bounded.
     bqc = best_chunk(_BWD_Q_CHUNK, S)
-    if S > bqc > _BWD_Q_CHUNK // 16:
+    if S > bqc > _BWD_Q_CHUNK // 16 and q_pos.ndim == 1:
         # Attention rows are independent, so dq splits cleanly by q-chunk
         # while dk/dv sum over chunks — the same decomposition the
         # einsum path's forward scan induces on its backward.
@@ -632,13 +639,17 @@ def decode_chain_leaf(policy: Numerics) -> NumericsPolicy | None:
 
 
 def decode_chain_enabled(policy: Numerics, rows: int, d: int,
-                         k_attn: int, d_ff: int) -> bool:
+                         k_attn: int, d_ff: int, *,
+                         moe: bool = False) -> bool:
     """Dispatch guard for the fused decode chain: every chain site must
     resolve to the same amsim leaf, killable via REPRO_DECODE_FUSED=0,
     no active shard_fused mesh dispatch (the sharded per-op path owns
     Megatron partitioning; under a mesh with REPRO_SHARD_FUSED=0 the
     chain engages with GSPMD-replicated lowering), and the shape must
-    pass the kernel's VMEM bounds."""
+    pass the VMEM budget model (kernels/vmem.py).  ``moe=True`` prices
+    the MoE back half (qkv + wo->norm launches; the expert-bank FFN
+    launch has its own guard, :func:`decode_moe_ffn_enabled`) instead of
+    the dense out-mlp launch."""
     leaf = decode_chain_leaf(policy)
     if leaf is None or leaf.mode != "amsim" or leaf.is_native:
         return False
@@ -647,10 +658,49 @@ def decode_chain_enabled(policy: Numerics, rows: int, d: int,
     from repro.distributed import shard_fused  # lazy: circular import
     if shard_fused.active_mesh(leaf) is not None:
         return False
-    from repro.kernels.decode_chain import decode_chain_supported
+    from repro.kernels import vmem
     mult = get_multiplier(leaf.multiplier)
-    return decode_chain_supported(rows, d, k_attn, d_ff,
-                                  mult.mantissa_bits, mult=mult.name)
+    if moe:
+        return vmem.moe_chain_fits(rows, d, k_attn, mult.mantissa_bits,
+                                   mult=mult.name)
+    return vmem.chain_fits(rows, d, k_attn, d_ff,
+                           mult.mantissa_bits, mult=mult.name)
+
+
+_MOE_FFN_SITES = ("wg", "wu", "wd")
+
+
+def moe_ffn_leaf(policy: Numerics) -> NumericsPolicy | None:
+    """The single leaf the stacked expert-bank launch would run wg/wu/wd
+    under, or None when they resolve differently (the router site stays
+    per-op either way, so it may differ freely)."""
+    leaves = [policy.resolve(s) for s in _MOE_FFN_SITES]
+    first = leaves[0]
+    for leaf in leaves[1:]:
+        if (leaf.mode, leaf.multiplier) != (first.mode, first.multiplier):
+            return None
+    return first
+
+
+def decode_moe_ffn_enabled(policy: Numerics, E: int, C: int, d: int,
+                           d_ff: int) -> bool:
+    """Dispatch guard for the stacked expert-bank FFN launch
+    (kernels/decode_chain.fused_moe_ffn).  Shares the chain's kill
+    switch and mesh exclusion; the shape gate is vmem.moe_ffn_fits,
+    whose capacity bound (C <= MAX_ROWS) keeps this a decode-tick path
+    without a separate sequence-length plumb."""
+    leaf = moe_ffn_leaf(policy)
+    if leaf is None or leaf.mode != "amsim" or leaf.is_native:
+        return False
+    if os.environ.get("REPRO_DECODE_FUSED", "1").lower() in ("0", "false"):
+        return False
+    from repro.distributed import shard_fused  # lazy: circular import
+    if shard_fused.active_mesh(leaf) is not None:
+        return False
+    from repro.kernels import vmem
+    mult = get_multiplier(leaf.multiplier)
+    return vmem.moe_ffn_fits(E, C, d, d_ff, mult.mantissa_bits,
+                             mult=mult.name)
 
 
 def decode_qkv_oracle(x, g1, wq, wk, wv, policy: Numerics, eps: float):
@@ -666,18 +716,46 @@ def decode_qkv_oracle(x, g1, wq, wk, wv, policy: Numerics, eps: float):
 
 
 def decode_out_mlp_oracle(x, attn, g2, wo, wg, wu, wd, policy: Numerics,
-                          eps: float):
+                          eps: float, bo=None, bd=None):
     """Unfused reference for the chain's back half: wo projection +
-    residual + rmsnorm + swiglu FFN + residual, per-op."""
+    residual + rmsnorm + swiglu FFN + residual, per-op.  Optional wo/wd
+    epilogue biases are added before the residual, matching
+    models/layers.linear's op order."""
     from repro.kernels.decode_chain import _rmsnorm_expr
-    x1 = x.astype(jnp.float32) + policy_matmul(
-        attn.astype(jnp.float32), wo, policy, "wo")
+    yo = policy_matmul(attn.astype(jnp.float32), wo, policy, "wo")
+    if bo is not None:
+        yo = yo + bo
+    x1 = x.astype(jnp.float32) + yo
     h = _rmsnorm_expr(x1, g2, eps)
     y = policy_matmul(
         jax.nn.silu(policy_matmul(h, wg, policy, "wg"))
         * policy_matmul(h, wu, policy, "wu"),
         wd, policy, "wd")
+    if bd is not None:
+        y = y + bd
     return x1 + y
+
+
+def decode_wo_norm_oracle(x, attn, g2, wo, bo, policy: Numerics, eps: float):
+    """Unfused reference for the MoE back half's shared prefix:
+    x1 = x + (attn @ wo [+ bo]); h = rmsnorm(x1).  Returns (x1, h)."""
+    from repro.kernels.decode_chain import _rmsnorm_expr
+    yo = policy_matmul(attn.astype(jnp.float32), wo, policy, "wo")
+    if bo is not None:
+        yo = yo + bo
+    x1 = x.astype(jnp.float32) + yo
+    return x1, _rmsnorm_expr(x1, g2, eps)
+
+
+def decode_moe_ffn_oracle(buf, wg, wu, wd, policy: Numerics):
+    """Unfused reference for the stacked expert-bank launch: exactly
+    what models/mlp.ffn runs on the (E, C, d) capacity buffer without a
+    mesh — three E-batched policy GEMMs (gemm3d bucket) under the
+    wg/wu/wd sites.  Expert banks carry no biases (init_ffn default)."""
+    return policy_matmul(
+        jax.nn.silu(policy_matmul(buf, wg, policy, "wg"))
+        * policy_matmul(buf, wu, policy, "wu"),
+        wd, policy, "wd")
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(5, 6))
@@ -749,3 +827,210 @@ def _decode_out_mlp_bwd(policy, eps, res, g):
 
 
 decode_out_mlp.defvjp(_decode_out_mlp_fwd, _decode_out_mlp_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(9, 10))
+def decode_out_mlp_b(x, attn, g2, wo, wg, wu, wd, bo, bd, policy: Numerics,
+                     eps: float):
+    """:func:`decode_out_mlp` with optional wo/wd epilogue biases (None
+    when absent).  Biases are folded into the launch's accumulator
+    epilogues — added before each residual, the per-op op order — and
+    the bias-free call lowers the identical kernel (statically absent
+    operands, not zero-valued ones, so no-bias outputs stay bitwise
+    against the historical launch)."""
+    return _decode_out_mlp_b_fwd_impl(x, attn, g2, wo, wg, wu, wd, bo, bd,
+                                      policy, eps)
+
+
+def _decode_out_mlp_b_fwd_impl(x, attn, g2, wo, wg, wu, wd, bo, bd,
+                               policy, eps):
+    from repro.kernels.decode_chain import fused_out_mlp
+    mult = get_multiplier(decode_chain_leaf(policy).multiplier)
+    return fused_out_mlp(x, attn, g2, wo, wg, wu, wd, _amsim_lut(mult),
+                         mult.mantissa_bits, eps=eps, bo=bo, bd=bd,
+                         mult=mult.name)
+
+
+def _decode_out_mlp_b_fwd(x, attn, g2, wo, wg, wu, wd, bo, bd, policy, eps):
+    out = _decode_out_mlp_b_fwd_impl(x, attn, g2, wo, wg, wu, wd, bo, bd,
+                                     policy, eps)
+    return out, (x, attn, g2, wo, wg, wu, wd, bo, bd)
+
+
+def _decode_out_mlp_b_bwd(policy, eps, res, g):
+    x, attn, g2, wo, wg, wu, wd, bo, bd = res
+    _, vjp = jax.vjp(
+        lambda *args: decode_out_mlp_oracle(*args[:7], policy, eps,
+                                            bo=args[7], bd=args[8]),
+        x, attn, g2, wo, wg, wu, wd, bo, bd)
+    return vjp(g.astype(jnp.float32))
+
+
+decode_out_mlp_b.defvjp(_decode_out_mlp_b_fwd, _decode_out_mlp_b_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def decode_wo_norm(x, attn, g2, wo, bo, policy: Numerics, eps: float):
+    """The MoE back half's shared prefix in one persistent launch:
+    x1 = x + (attn @ wo [+ bo]); h = rmsnorm(x1; g2); returns (x1, h).
+
+    Same fold as :func:`decode_out_mlp`'s phase A (bit-tested against
+    :func:`decode_wo_norm_oracle`); the router/top-k/scatter that
+    consume h stay per-op in models/moe.py.  Backward recomputes through
+    the oracle.  Callers must have checked
+    ``decode_chain_enabled(..., moe=True)``.
+    """
+    return _decode_wo_norm_fwd_impl(x, attn, g2, wo, bo, policy, eps)
+
+
+def _decode_wo_norm_fwd_impl(x, attn, g2, wo, bo, policy, eps):
+    from repro.kernels.decode_chain import fused_wo_norm
+    mult = get_multiplier(decode_chain_leaf(policy).multiplier)
+    return fused_wo_norm(x, attn, g2, wo, _amsim_lut(mult),
+                         mult.mantissa_bits, eps=eps, bo=bo,
+                         mult=mult.name)
+
+
+def _decode_wo_norm_fwd(x, attn, g2, wo, bo, policy, eps):
+    out = _decode_wo_norm_fwd_impl(x, attn, g2, wo, bo, policy, eps)
+    return out, (x, attn, g2, wo, bo)
+
+
+def _decode_wo_norm_bwd(policy, eps, res, g):
+    x, attn, g2, wo, bo = res
+    _, vjp = jax.vjp(
+        lambda *args: decode_wo_norm_oracle(*args, policy, eps),
+        x, attn, g2, wo, bo)
+    return vjp(tuple(c.astype(jnp.float32) for c in g))
+
+
+decode_wo_norm.defvjp(_decode_wo_norm_fwd, _decode_wo_norm_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def decode_moe_ffn(buf, wg, wu, wd, policy: Numerics):
+    """Stacked expert-bank swiglu FFN in one persistent launch: buf is
+    the scattered (E, C, d) capacity buffer, wg/wu (E, d, d_ff) and
+    wd (E, d_ff, d) the expert banks.  Bit-identical to the E-batched
+    per-op lowering (:func:`decode_moe_ffn_oracle` — the gemm3d folds
+    are slaved to ``approx_gemm_batched``'s bucket); backward recomputes
+    through the oracle.  Callers must have checked
+    :func:`decode_moe_ffn_enabled`.
+    """
+    return _decode_moe_ffn_fwd_impl(buf, wg, wu, wd, policy)
+
+
+def _decode_moe_ffn_fwd_impl(buf, wg, wu, wd, policy):
+    from repro.kernels.decode_chain import fused_moe_ffn
+    mult = get_multiplier(moe_ffn_leaf(policy).multiplier)
+    return fused_moe_ffn(buf, wg, wu, wd, _amsim_lut(mult),
+                         mult.mantissa_bits, mult=mult.name)
+
+
+def _decode_moe_ffn_fwd(buf, wg, wu, wd, policy):
+    out = _decode_moe_ffn_fwd_impl(buf, wg, wu, wd, policy)
+    return out, (buf, wg, wu, wd)
+
+
+def _decode_moe_ffn_bwd(policy, res, g):
+    buf, wg, wu, wd = res
+    _, vjp = jax.vjp(
+        lambda *args: decode_moe_ffn_oracle(*args, policy),
+        buf, wg, wu, wd)
+    return vjp(g.astype(jnp.float32))
+
+
+decode_moe_ffn.defvjp(_decode_moe_ffn_fwd, _decode_moe_ffn_bwd)
+
+
+def decode_fuse_attn_enabled(policy: Numerics, rows: int, d: int,
+                             k_attn: int, d_ff: int, T: int, KV: int,
+                             dh: int) -> bool:
+    """Dispatch guard for collapsing the attention core INTO the
+    back-half launch (three chain launches -> two,
+    kernels/decode_chain.fused_attn_out_mlp).  On top of the chain's own
+    guard (callers check :func:`decode_chain_enabled` first) this
+    requires the attention sites to resolve to the SAME leaf as the
+    chain sites (the launch bakes one LUT for all seven GEMMs), honours
+    REPRO_ATTN_FUSED=0 (the attention core stays per-op / standalone)
+    and its own kill switch REPRO_DECODE_FUSE_ATTN=0, and asks the VMEM
+    budget model whether the K/V views fit next to the back half's
+    working set in the single-KV-block bitwise regime
+    (vmem.fuse_attention_ok)."""
+    leaf = decode_chain_leaf(policy)
+    if leaf is None or leaf.mode != "amsim" or leaf.is_native:
+        return False
+    aleaf = attention_fused_leaf(policy)
+    if aleaf is None or (aleaf.mode, aleaf.multiplier) != \
+            (leaf.mode, leaf.multiplier):
+        return False
+    if os.environ.get("REPRO_DECODE_FUSED", "1").lower() in ("0", "false"):
+        return False
+    if os.environ.get("REPRO_ATTN_FUSED", "1").lower() in ("0", "false"):
+        return False
+    if os.environ.get("REPRO_DECODE_FUSE_ATTN", "1").lower() in \
+            ("0", "false"):
+        return False
+    from repro.kernels import vmem
+    mult = get_multiplier(leaf.multiplier)
+    return vmem.fuse_attention_ok(rows, d, k_attn, d_ff, rows, T, KV, dh,
+                                  mult.mantissa_bits, mult=mult.name)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(13, 14, 15, 16))
+def decode_attn_out_mlp(x, q, k, v, q_pos, k_pos, g2, wo, wg, wu, wd,
+                        bo, bd, policy: Numerics, eps: float,
+                        causal: bool, window: int):
+    """Attention core + the whole dense back half in ONE persistent
+    launch (the chain's launches 2 and 3 collapsed).  x (rows, d)
+    residual stream; q (B, 1, H, dh) RoPE'd queries; k/v (B, T, KV, dh)
+    post-update cache views; positions shared or per-row as
+    ``attend_einsum``.  Bit-identical to the 3-launch chain AND the
+    per-op path in the guard's single-KV-block regime; backward
+    recomputes through ``attend_einsum`` + :func:`decode_out_mlp_oracle`
+    (jax.vjp), so gradients take exactly the per-op lowering.  Callers
+    must have checked :func:`decode_fuse_attn_enabled`.
+    """
+    return _decode_attn_out_mlp_fwd_impl(x, q, k, v, q_pos, k_pos, g2, wo,
+                                         wg, wu, wd, bo, bd, policy, eps,
+                                         causal, window)
+
+
+def _decode_attn_out_mlp_fwd_impl(x, q, k, v, q_pos, k_pos, g2, wo, wg, wu,
+                                  wd, bo, bd, policy, eps, causal, window):
+    from repro.kernels.decode_chain import fused_attn_out_mlp
+    mult = get_multiplier(decode_chain_leaf(policy).multiplier)
+    return fused_attn_out_mlp(x, q, k, v, q_pos, k_pos, g2, wo, wg, wu, wd,
+                              _amsim_lut(mult), mult.mantissa_bits, eps=eps,
+                              causal=causal, window=int(window), bo=bo,
+                              bd=bd, mult=mult.name)
+
+
+def _decode_attn_out_mlp_fwd(x, q, k, v, q_pos, k_pos, g2, wo, wg, wu, wd,
+                             bo, bd, policy, eps, causal, window):
+    out = _decode_attn_out_mlp_fwd_impl(x, q, k, v, q_pos, k_pos, g2, wo,
+                                        wg, wu, wd, bo, bd, policy, eps,
+                                        causal, window)
+    return out, (x, q, k, v, q_pos, k_pos, g2, wo, wg, wu, wd, bo, bd)
+
+
+def _decode_attn_out_mlp_bwd(policy, eps, causal, window, res, g):
+    x, q, k, v, q_pos, k_pos, g2, wo, wg, wu, wd, bo, bd = res
+    B, S, H, dh = q.shape
+
+    def f(x_, q_, k_, v_, g2_, wo_, wg_, wu_, wd_, bo_, bd_):
+        a = attend_einsum(q_, k_, v_, q_pos, k_pos, policy,
+                          causal=causal, window=window)
+        return decode_out_mlp_oracle(x_, a.reshape(B * S, H * dh), g2_,
+                                     wo_, wg_, wu_, wd_, policy, eps,
+                                     bo=bo_, bd=bd_)
+
+    _, vjp = jax.vjp(f, x, q, k, v, g2, wo, wg, wu, wd, bo, bd)
+    dx, dq, dk, dv, dg2, dwo, dwg, dwu, dwd, dbo, dbd = \
+        vjp(g.astype(jnp.float32))
+    zero = lambda p: np.zeros(p.shape, jax.dtypes.float0)  # int positions
+    return (dx, dq, dk, dv, zero(q_pos), zero(k_pos), dg2, dwo, dwg, dwu,
+            dwd, dbo, dbd)
+
+
+decode_attn_out_mlp.defvjp(_decode_attn_out_mlp_fwd, _decode_attn_out_mlp_bwd)

@@ -244,7 +244,8 @@ def _paged_cache_update(cache, k, v, q_pos):
 def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
               kv_src=None, causal=True, q_offset=0, cache=None,
               window: int = 0, q_chunk: int | None = None,
-              use_rope: bool = True, qkv=None, project_out: bool = True):
+              use_rope: bool = True, qkv=None, project_out: bool = True,
+              capture_attend: bool = False):
     """Full attention block.  Returns (out, new_cache).
 
     kv_src: encoder states for cross-attention (no rope, no cache update
@@ -261,6 +262,14 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
     project_out: when False, return the pre-``wo`` context
             (B, S, H*dh) — the fused decode chain folds the output
             projection into its out-mlp launch.
+    capture_attend: when True, stop AFTER rope + cache update and
+            return ``((q, k, v, q_pos, k_pos), new_cache)`` — the RoPE'd
+            queries, the post-update full K/V views and both position
+            vectors — instead of attending.  This is the decode chain's
+            2-launch hook (ops.decode_attn_out_mlp): the attention core
+            runs INSIDE the back-half launch, while rope and the cache
+            update stay shared here.  Callers are responsible for having
+            checked ``ops.decode_fuse_attn_enabled``.
     """
     B, S, d = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -337,6 +346,9 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
     else:
         k_pos = jnp.arange(Tsrc, dtype=jnp.int32) if kv_src is not None else q_pos
 
+    if capture_attend:
+        return (q, k, v, q_pos, k_pos), cache
+
     # Dispatch decision, made ONCE here and passed down: both kernel
     # lowerings ("fused" single-device, "sharded" per-shard) block q
     # internally (the q-block grid axis), so the memory-side motivation
@@ -348,14 +360,25 @@ def attention(p, x, cfg: ArchConfig, policy: Numerics, *,
     # call fell back to einsum would rematerialise the full score
     # tensor the scan exists to bound).
     if q_pos.ndim > 1:
-        # Per-slot positions (paged serving cache): the fused and
-        # sharded kernel lowerings consume ONE position vector shared
-        # across the batch, so batched-position calls always take the
-        # einsum chain — it masks per row, still resolves the
-        # attn_score/attn_value sites through the policy (the amsim
-        # contractions lower to the batched LUT GEMM kernel), and GSPMD
-        # partitions it natively under a mesh.
-        dispatch = "einsum"
+        # Per-slot positions (paged serving cache): the sharded kernel
+        # lowering consumes ONE position vector shared across the
+        # batch, so mesh-active batched-position calls keep the einsum
+        # chain (GSPMD partitions it natively, it masks per row, and
+        # the amsim contractions still lower to the batched LUT GEMM
+        # kernel).  Off-mesh, the single-device one-launch kernel
+        # accepts per-row positions directly (its mask/liveness
+        # operands grow a leading batch axis), so paged serving decode
+        # ticks run the same fused attention core as the ring layout —
+        # this is what lets ContinuousBatchingEngine ticks take the
+        # persistent decode chain end to end.
+        leaf = attention_fused_leaf(policy)
+        mesh = shard_fused.active_mesh(leaf) if leaf is not None else None
+        if mesh is None and fused_attention_enabled(
+                policy, q.shape, k.shape, causal=causal, window=window,
+                per_row=True):
+            dispatch = "fused"
+        else:
+            dispatch = "einsum"
     else:
         dispatch = _derive_dispatch(policy, q.shape, k.shape,
                                     causal=causal, window=window)

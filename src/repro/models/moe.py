@@ -68,7 +68,21 @@ def moe_ffn(p, x, cfg: ArchConfig, policy: NumericsPolicy):
     buf = jnp.zeros((E, C, d), xf.dtype).at[e_flat, slot].set(
         xf[tok], mode="drop")                             # (E, C, d)
 
-    out = ffn(p["experts"], buf, policy, cfg.act)         # batched over E
+    # Expert FFN over the capacity buffer.  On decode ticks (small C)
+    # under a homogeneous amsim wg/wu/wd leaf this is ONE persistent
+    # stacked-bank launch (kernels/decode_chain.fused_moe_ffn) —
+    # bit-identical to the E-batched per-op lowering, whose gemm3d folds
+    # the launch slaves its accumulation to.  Training/prefill C blows
+    # the guard's VMEM row bound, so those keep the batched per-op path.
+    ew = p["experts"]
+    from repro.kernels import ops
+    if (cfg.act == "swiglu" and "wg" in ew
+            and not any("b" in ew[s] for s in ("wg", "wu", "wd"))
+            and ops.decode_moe_ffn_enabled(policy, E, C, d, m.d_ff)):
+        out = ops.decode_moe_ffn(buf, ew["wg"]["w"], ew["wu"]["w"],
+                                 ew["wd"]["w"], policy)
+    else:
+        out = ffn(ew, buf, policy, cfg.act)               # batched over E
 
     got = out.at[e_flat, jnp.minimum(slot, C - 1)].get()  # (T*k, d)
     got = jnp.where((slot < C)[:, None], got, 0.0)

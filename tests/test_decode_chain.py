@@ -171,6 +171,185 @@ def test_decode_chain_vjp_matches_oracle(hermetic):
                 err_msg=f"{mult}: out_mlp d{name}")
 
 
+def test_bias_fold_bitwise(hermetic):
+    """wo/wd epilogue biases fold into the back-half launch epilogues as
+    statically-gated operands: with biases the fused op must match the
+    per-op oracle bitwise (fwd + grads), and the bias-free call of the
+    bias-capable op must stay bitwise against the historical bias-free
+    kernel (no unconditional +0.0 sneaking into the fold)."""
+    from repro.core.policy import NumericsPolicy
+    from repro.kernels import ops
+    rng = np.random.default_rng(1)
+    rows, d, K, F = 2, 128, 128, 256
+    arr = lambda *s: jnp.asarray(rng.standard_normal(s) * 0.1, jnp.float32)
+    x, attn, g2 = arr(rows, d), arr(rows, K), arr(d)
+    wo, wg, wu, wd = arr(K, d), arr(d, F), arr(d, F), arr(F, d)
+    bo, bd = arr(d), arr(d)
+    pol = NumericsPolicy(mode="amsim", multiplier="mitchell8")
+
+    for bo_, bd_ in ((bo, bd), (bo, None), (None, bd)):
+        args = (x, attn, g2, wo, wg, wu, wd, bo_, bd_)
+        fused = jax.jit(lambda a: ops.decode_out_mlp_b(*a, pol, 1e-5))(args)
+        oracle = ops.decode_out_mlp_oracle(x, attn, g2, wo, wg, wu, wd,
+                                           pol, 1e-5, bo=bo_, bd=bd_)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(oracle),
+                                      err_msg=f"bias fwd {bo_ is None},"
+                                              f"{bd_ is None}")
+    gl = jax.grad(lambda a: jnp.sum(
+        ops.decode_out_mlp_b(*a, pol, 1e-5) ** 2))(
+        (x, attn, g2, wo, wg, wu, wd, bo, bd))
+    go = jax.grad(lambda a: jnp.sum(
+        ops.decode_out_mlp_oracle(*a[:7], pol, 1e-5, bo=a[7],
+                                  bd=a[8]) ** 2))(
+        (x, attn, g2, wo, wg, wu, wd, bo, bd))
+    for name, a, b in zip("x attn g2 wo wg wu wd bo bd".split(), gl, go):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"bias d{name}")
+    # Bias-free through the bias-capable op == the historical kernel.
+    nb = ops.decode_out_mlp_b(x, attn, g2, wo, wg, wu, wd, None, None,
+                              pol, 1e-5)
+    legacy = ops.decode_out_mlp(x, attn, g2, wo, wg, wu, wd, pol, 1e-5)
+    np.testing.assert_array_equal(np.asarray(nb), np.asarray(legacy))
+
+
+def test_attn_fused_two_launch(setup):
+    """The VMEM budget model collapses attention INTO the back-half
+    launch (3 launches -> 2) on shapes in the single-KV-block regime:
+    the 2-launch decode must be bitwise-identical to the 3-launch chain
+    (REPRO_DECODE_FUSE_ATTN=0) and the per-op path, and the standalone
+    attention kernel's trace counter must show decode attention moved
+    in-kernel (fewer standalone traces with the fusion on)."""
+    from repro.core.policy import NumericsPolicy
+    from repro.kernels import approx_attention, decode_chain
+    cfg, params = setup
+    pol = NumericsPolicy(mode="amsim", multiplier="mitchell8")
+
+    a0 = approx_attention.trace_count()
+    two = _decode_logits(cfg, pol, params,
+                         {"REPRO_DECODE_FUSED": "1",
+                          "REPRO_DECODE_FUSE_ATTN": "1"})
+    attn_two = approx_attention.trace_count() - a0
+
+    a1 = approx_attention.trace_count()
+    t1 = decode_chain.trace_count()
+    three = _decode_logits(cfg, pol, params,
+                           {"REPRO_DECODE_FUSED": "1",
+                            "REPRO_DECODE_FUSE_ATTN": "0"})
+    attn_three = approx_attention.trace_count() - a1
+    assert decode_chain.trace_count() > t1, "chain disengaged entirely"
+
+    perop = _decode_logits(cfg, pol, params, {"REPRO_DECODE_FUSED": "0"})
+
+    assert attn_two < attn_three, \
+        "2-launch mode still traced the standalone attention kernel on " \
+        "decode ticks"
+    for i, (a, b, c) in enumerate(zip(two, three, perop)):
+        np.testing.assert_array_equal(a, b,
+                                      err_msg=f"step {i}: 2- vs 3-launch")
+        np.testing.assert_array_equal(a, c,
+                                      err_msg=f"step {i}: 2-launch vs per-op")
+
+
+def test_moe_decode_chain_bitwise(hermetic):
+    """The MoE decode back half (fused wo->norm + stacked expert-bank
+    launch, router per-op) must be bitwise-invisible in serve-path
+    decode logits, with the chain trace counter proving engagement."""
+    from repro.configs import get_arch, reduced
+    from repro.core.policy import NumericsPolicy
+    from repro.kernels import decode_chain
+    from repro.models.transformer import init_lm
+    cfg = reduced(get_arch("granite-moe-3b-a800m"), n_layers=1)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    pol = NumericsPolicy(mode="amsim", multiplier="mitchell8")
+
+    t0 = decode_chain.trace_count()
+    fused = _decode_logits(cfg, pol, params, {"REPRO_DECODE_FUSED": "1"})
+    assert decode_chain.trace_count() > t0, "MoE chain never engaged"
+    t1 = decode_chain.trace_count()
+    perop = _decode_logits(cfg, pol, params, {"REPRO_DECODE_FUSED": "0"})
+    assert decode_chain.trace_count() == t1
+    for i, (a, b) in enumerate(zip(fused, perop)):
+        np.testing.assert_array_equal(a, b, err_msg=f"moe step {i}")
+
+
+def test_cbe_paged_moe_chain(hermetic):
+    """MoE decode through the continuous-batching engine's paged-KV
+    ticks: the chain engages (trace counter) and the generated tokens
+    are identical to a chain-off engine — the end-to-end statement that
+    paged serving + MoE now run the persistent decode chain."""
+    from repro.configs import get_arch, reduced
+    from repro.core.policy import NumericsPolicy
+    from repro.kernels import decode_chain
+    from repro.models.transformer import init_lm
+    from repro.serve.scheduler import ContinuousBatchingEngine
+    cfg = reduced(get_arch("granite-moe-3b-a800m"), n_layers=1)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    pol = NumericsPolicy(mode="amsim", multiplier="exact7")
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab, size=n).tolist() for n in (5, 3)]
+
+    def run(env):
+        saved = _with_env(env)
+        try:
+            cbe = ContinuousBatchingEngine(cfg, {"t": pol}, params,
+                                           max_len=32, capacity=2,
+                                           page_size=4)
+            rids = [cbe.submit(p, 5, tier="t") for p in prompts]
+            out = cbe.drain()
+            return [out[r] for r in rids]
+        finally:
+            _with_env(saved)
+
+    t0 = decode_chain.trace_count()
+    fused = run({"REPRO_DECODE_FUSED": "1"})
+    assert decode_chain.trace_count() > t0, \
+        "paged MoE decode tick did not engage the chain"
+    t1 = decode_chain.trace_count()
+    perop = run({"REPRO_DECODE_FUSED": "0"})
+    assert decode_chain.trace_count() == t1
+    assert fused == perop, "paged MoE chain changed generated tokens"
+
+
+def test_vmem_budget_model(hermetic):
+    """Unit contract of the kernels/vmem.py estimators: the dispatch
+    guard delegates to chain_fits; fuse_attention_ok enforces the
+    bitwise regime (T <= 128) and the row bound; filter_candidates never
+    returns empty and keeps only in-budget configs otherwise."""
+    from repro.kernels import vmem
+    from repro.kernels.autotune import CANDIDATES_DECODE_CHAIN
+    from repro.kernels.decode_chain import decode_chain_supported
+    M = 8
+    for shape in ((2, 128, 128, 256), (4, 256, 256, 1024)):
+        assert decode_chain_supported(*shape, M) == \
+            vmem.chain_fits(*shape, M)
+    assert vmem.chain_fits(2, 128, 128, 256, M)
+    assert not vmem.chain_fits(vmem.MAX_ROWS + 1, 128, 128, 256, M)
+    assert not vmem.chain_fits(0, 128, 128, 256, M)
+
+    # fuse_attention_ok: in-regime shape passes, T > 128 (outside the
+    # single-chunk einsum-bitwise regime) and rows != B never do.
+    ok = vmem.fuse_attention_ok(2, 128, 128, 256, 2, 32, 2, 32, M)
+    assert ok, "small decode shape should admit the 2-launch form"
+    assert not vmem.fuse_attention_ok(2, 128, 128, 256, 2, 256, 2, 32, M)
+    assert not vmem.fuse_attention_ok(4, 128, 128, 256, 2, 32, 2, 32, M)
+
+    # moe_ffn_fits: the capacity bound keeps it a decode-only path.
+    assert vmem.moe_ffn_fits(8, 8, 128, 64, M)
+    assert not vmem.moe_ffn_fits(8, vmem.MAX_ROWS + 8, 128, 64, M)
+
+    cands = [(c.bn, c.bko, c.bf, c.overlap)
+             for c in CANDIDATES_DECODE_CHAIN]
+    kept = vmem.filter_candidates(cands, 2, 128, 128, 256, M)
+    assert kept and set(kept) <= set(cands)
+    for c in kept:
+        assert vmem.chain_bytes(2, 128, 128, 256, M, bn=c[0],
+                                bf=c[2]) <= vmem.VMEM_BUDGET
+    # A shape no candidate fits still yields the smallest-footprint one.
+    huge = vmem.filter_candidates(cands, vmem.MAX_ROWS, 8192, 8192,
+                                  32768, M)
+    assert len(huge) >= 1
+
+
 # ---------------------------------------------------- kill-switch nesting
 def test_kill_switch_nests_with_attn_fused(setup):
     """REPRO_ATTN_FUSED=0 swaps the attention *core* to the einsum
@@ -292,9 +471,10 @@ def test_decode_chain_under_mesh():
 def test_overlap_psum_settings():
     """REPRO_OVERLAP_PSUM on the row-parallel reduce: 1 (single psum),
     explicit chunk counts, and auto must all be bitwise-identical (the
-    chunking splits OUTPUT columns, never the fold); the ring
-    (reduce-scatter + all-gather) variant reassociates and is held to
-    allclose."""
+    chunking splits OUTPUT columns, never the fold); the ring variant
+    accumulates in fixed shard-index order — on the two-device model
+    axis that is bitwise-identical to the single psum too (FP add is
+    commutative), so it is held to the same standard."""
     code = textwrap.dedent("""
     import os
     import jax, jax.numpy as jnp, numpy as np
@@ -322,8 +502,7 @@ def test_overlap_psum_settings():
         assert bool(jnp.all(out == base)), f"overlap={setting} not bitwise"
     os.environ["REPRO_OVERLAP_PSUM"] = "ring"
     ring = run()
-    np.testing.assert_allclose(np.asarray(ring), np.asarray(base),
-                               rtol=1e-6, atol=1e-6)
+    assert bool(jnp.all(ring == base)), "ring not bitwise on 2-dev axis"
     del os.environ["REPRO_OVERLAP_PSUM"]
     print("OK overlap")
     """)
